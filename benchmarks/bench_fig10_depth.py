@@ -1,0 +1,36 @@
+"""Paper Fig. 10: accuracy vs MLP depth for different first-layer LUT
+configurations (higher first-layer resolution ⇒ higher, slower-degrading
+accuracy with depth)."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data import synthetic_mnist
+from repro.models import cnn
+
+
+def run() -> None:
+    x, y = synthetic_mnist(2048, seed=0)
+    for depth_layers in (2, 3, 4):
+        sizes = (784,) + (128,) * (depth_layers - 1) + (10,)
+        cfg = cnn.MLPConfig(sizes=sizes)
+        params = cnn.mlp_train(cfg, x, y, steps=200, lr=0.1)
+        n_layers = len(sizes) - 1
+        exact = cnn.mlp_accuracy(
+            lambda xb: cnn.mlp_forward(params, xb, n_layers), x[:512], y[:512])
+        emit(f"fig10/exact/depth{depth_layers}", 0.0, f"acc={exact:.3f}")
+        # first-layer configs: (C1, I1) resolutions from 2/16 to 4/4;
+        # hidden layers at high resolution (C=32, I=4) so the first layer is
+        # the accuracy bottleneck (the paper's Fig. 10 setup)
+        for c1, i1 in ((49, 2), (98, 4), (196, 4)):
+            cbs = (c1,) + (32,) * (n_layers - 1)
+            dps = (i1,) + (4,) * (n_layers - 1)
+            chain = cnn.mlp_to_amm(params, cfg, x[:1024], num_codebooks=cbs,
+                                   depths=dps)
+            acc = cnn.mlp_accuracy(lambda xb: chain(xb), x[:512], y[:512])
+            emit(f"fig10/lutmu_c1={c1}_I{i1}/depth{depth_layers}", 0.0,
+                 f"acc={acc:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Fig. 11: pruned vs unpruned LUT-MU resource growth as resolution
+(I/d_sub) rises.  Resource proxy = LUT bytes (FPGA-LUT stand-in)."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.maddness import HashTree
+from repro.core.pruning import plan_from_consumer_tree, pruned_param_bytes
+
+
+def run() -> None:
+    d_in = d_out = 256
+    for d_sub in (8, 16):
+        for depth in (3, 4, 5):
+            c = d_in // d_sub
+            c_next = d_out // d_sub
+            unpruned = pruned_param_bytes(c, depth, d_out, None, itemsize=1)
+            tree = HashTree(jnp.zeros((c_next, depth), jnp.int32),
+                            jnp.zeros((c_next, 2**depth - 1), jnp.float32))
+            plan = plan_from_consumer_tree(tree, d_out)
+            pruned = pruned_param_bytes(c, depth, d_out, plan, itemsize=1)
+            emit(f"fig11/{d_sub}x{2**depth}", 0.0,
+                 f"resolution={depth / d_sub:.3f};unpruned_bytes={unpruned};"
+                 f"pruned_bytes={pruned};saving={unpruned / pruned:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

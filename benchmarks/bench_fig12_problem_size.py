@@ -1,0 +1,40 @@
+"""Paper Fig. 12: LUT resource occupancy vs problem size (D_in, D_out) under
+three LUT configurations:
+
+  (a) fixed d_sub for input and output  → pruned grows with D (C grows);
+  (b) fixed input d_sub, fixed output C → pruned growth mitigated;
+  (c) fixed C both sides               → pruned footprint ~constant
+      (the paper's key scalability result).
+"""
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.maddness import HashTree
+from repro.core.pruning import plan_from_consumer_tree, pruned_param_bytes
+
+
+def _bytes(c_in, depth, d_out, c_next):
+    unpruned = pruned_param_bytes(c_in, depth, d_out, None, itemsize=1)
+    tree = HashTree(jnp.zeros((c_next, depth), jnp.int32),
+                    jnp.zeros((c_next, 2**depth - 1), jnp.float32))
+    plan = plan_from_consumer_tree(tree, d_out)
+    pruned = pruned_param_bytes(c_in, depth, d_out, plan, itemsize=1)
+    return unpruned, pruned
+
+
+def run() -> None:
+    depth = 4
+    for d in (64, 128, 256):
+        # (a) fixed d_sub = 8 on both sides
+        u, p = _bytes(d // 8, depth, d, d // 8)
+        emit(f"fig12/dsub_both/{d}", 0.0, f"unpruned={u};pruned={p}")
+        # (b) input d_sub = 8, output C = 8 fixed
+        u, p = _bytes(d // 8, depth, d, 8)
+        emit(f"fig12/dsub_in_Cout/{d}", 0.0, f"unpruned={u};pruned={p}")
+        # (c) fixed C = 8 both sides → pruned is constant in d
+        u, p = _bytes(8, depth, d, 8)
+        emit(f"fig12/C_both/{d}", 0.0, f"unpruned={u};pruned={p}")
+
+
+if __name__ == "__main__":
+    run()

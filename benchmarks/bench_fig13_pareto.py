@@ -1,0 +1,49 @@
+"""Paper Fig. 13 / Table I: power–II Pareto across partition factors (S, E),
+LUT-MU vs MVAU, plus measured µs/call of our MXU-path aggregation (the TPU
+analogue of the partition DSE: kernel block shapes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core import ii_model
+from repro.core import maddness as M
+
+
+def run() -> None:
+    # --- analytic Pareto (paper's FPGA model) -----------------------------
+    # SFC layer 2: (256, 256) weight; LUT shape (32, 8, 48): C_in=32, I=4
+    for (s, e) in ((2, 1), (4, 1), (4, 2), (8, 1), (8, 4)):
+        cfg = ii_model.LutMuConfig(c_in=32, depth_in=4, c_out=12,
+                                   depth_out=4, s=s, e=e)
+        ii = ii_model.initiation_interval(cfg)
+        mw = ii_model.power_proxy_mw(cfg)
+        fps = ii_model.throughput_fps(cfg)
+        emit(f"fig13/lutmu_S{s}E{e}", 0.0,
+             f"II={ii:.0f};power_mw={mw:.0f};fps={fps:.2e}")
+    # MVAU baseline: II = fold = (256/SIMD)(256/PE)
+    for (pe, simd) in ((16, 16), (32, 32), (64, 64), (128, 128)):
+        fold = (256 // simd) * (256 // pe)
+        # power proxy ∝ PE·SIMD MAC array
+        mw = 60 + 0.02 * pe * simd
+        emit(f"fig13/mvau_PE{pe}", 0.0,
+             f"II={fold};power_mw={mw:.0f};fps={1e8 / max(fold, 10):.2e}")
+
+    # --- measured µs/call of the one-hot aggregation across tilings -------
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1024, 256)).astype(np.float32)
+    w = rng.normal(size=(256, 256)).astype(np.float32)
+    p = M.fit_maddness(x[:512], w, 32, depth=4, optimize_prototypes=False)
+    xt = jnp.asarray(x)
+
+    fn = jax.jit(lambda v: M.maddness_matmul_onehot(v, p))
+    us = time_us(fn, xt)
+    emit("fig13/measured_onehot_path", us, "shape=1024x256x256")
+    fn_exact = jax.jit(lambda v: v @ jnp.asarray(w))
+    us_e = time_us(fn_exact, xt)
+    emit("fig13/measured_exact_matmul", us_e, "shape=1024x256x256")
+
+
+if __name__ == "__main__":
+    run()

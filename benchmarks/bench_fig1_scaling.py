@@ -1,0 +1,41 @@
+"""Paper Fig. 1: arithmetic workload and memory footprint vs equivalent
+matmul complexity, across exact / FINN-int4 / MADDNESS / LUT-MU(pruned).
+
+Workload = online ops per input row; footprint = parameter bytes.  Matches
+the paper's qualitative claim: LUT methods cut workload by ~d_sub/I per
+output but pay a footprint premium that pruning halves.
+"""
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.pruning import pruned_param_bytes, workload_ops
+from repro.core.maddness import HashTree
+from repro.core.pruning import plan_from_consumer_tree
+import jax.numpy as jnp
+
+
+def run() -> None:
+    d_sub, depth = 8, 4
+    for n in (64, 128, 256, 512, 1024):
+        d = n  # square matmuls like the paper's sweep
+        c = d // d_sub
+        exact_ops = 2 * d * n
+        exact_bytes = d * n * 4
+        finn_ops = 2 * d * n  # int4 MACs (same count, cheaper unit)
+        finn_bytes = d * n // 2  # 4-bit weights
+        madd_ops = workload_ops(c, depth, n)
+        madd_bytes = pruned_param_bytes(c, depth, n, None, itemsize=1)
+        tree = HashTree(jnp.zeros((n // d_sub, depth), jnp.int32),
+                        jnp.zeros((n // d_sub, 2**depth - 1), jnp.float32))
+        plan = plan_from_consumer_tree(tree, n)
+        lutmu_ops = workload_ops(c, depth, plan.num_kept)
+        lutmu_bytes = pruned_param_bytes(c, depth, n, plan, itemsize=1)
+        emit(f"fig1/exact/{n}", 0.0, f"ops={exact_ops};bytes={exact_bytes}")
+        emit(f"fig1/finn_int4/{n}", 0.0, f"ops={finn_ops};bytes={finn_bytes}")
+        emit(f"fig1/maddness/{n}", 0.0, f"ops={madd_ops};bytes={madd_bytes}")
+        emit(f"fig1/lutmu_pruned/{n}", 0.0,
+             f"ops={lutmu_ops};bytes={lutmu_bytes}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Table II/III: end-to-end throughput/efficiency, re-based as TPU
+roofline-derived GOPS for our cells (the FPGA GOPS/W axis has no TPU twin —
+we report equivalent-complexity throughput at the roofline bound, per cell),
+plus the paper models' complexity accounting.
+"""
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parents[1] / "dryrun_results"
+
+
+def run() -> None:
+    # paper model complexities (Table II), equivalent-ops accounting
+    for model, mops in (("resnet9", 570), ("resnet18", 1291),
+                        ("resnet50", 2518)):
+        emit(f"table2/{model}", 0.0, f"complexity_mops={mops}")
+
+    # our cells: tokens/s at the roofline bound (from the dry-run artifacts)
+    try:
+        from repro.analysis.roofline import load_all
+    except Exception:
+        return
+    for r in load_all(mesh="16x16"):
+        if r.get("skipped"):
+            continue
+        bound = r["bound_s"]
+        if bound <= 0:
+            continue
+        emit(f"table2/{r['arch']}/{r['shape']}", bound * 1e6,
+             f"bottleneck={r['bottleneck']};roofline_frac="
+             f"{r['roofline_fraction']:.3f};useful={r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Figure benches reproduce the
+paper's relative claims at reduced scale; table2 reads the dry-run roofline
+artifacts when present.
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_fig1_scaling, bench_fig9_pruning,
+                            bench_fig10_depth, bench_fig11_scalability,
+                            bench_fig12_problem_size, bench_fig13_pareto,
+                            bench_table2_e2e)
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in (bench_fig1_scaling, bench_fig11_scalability,
+                bench_fig12_problem_size, bench_fig13_pareto,
+                bench_table2_e2e, bench_fig10_depth, bench_fig9_pruning):
+        try:
+            mod.run()
+        except Exception as e:  # noqa
+            traceback.print_exc()
+            failed.append(mod.__name__)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

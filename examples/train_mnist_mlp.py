@@ -1,0 +1,41 @@
+"""End-to-end driver #1 (the paper's SFC/MNIST case study):
+
+train an MLP on synthetic MNIST → offline-fit pruned LUT-MUs for every
+matmul → compare accuracy / footprint / workload — the complete Fig. 10 /
+Table I story.
+
+Run:  PYTHONPATH=src python examples/train_mnist_mlp.py
+"""
+import numpy as np
+
+from repro.core import lut_mu as LM
+from repro.data import synthetic_mnist
+from repro.models import cnn
+
+x, y = synthetic_mnist(4096, seed=0)
+xt, yt = x[3072:], y[3072:]
+x, y = x[:3072], y[:3072]
+
+cfg = cnn.MLPConfig(sizes=(784, 128, 128, 10))
+print("training exact MLP (784-128-128-10) on synthetic MNIST …")
+params = cnn.mlp_train(cfg, x, y, steps=300, lr=0.1)
+n_layers = len(cfg.sizes) - 1
+exact_acc = cnn.mlp_accuracy(
+    lambda xb: cnn.mlp_forward(params, xb, n_layers), xt, yt)
+print(f"exact accuracy:      {exact_acc:.3f}")
+
+for cbs, dps, tag in (
+    ((98, 16, 16), (4, 4, 4), "high-res first layer (C=98)"),
+    ((49, 16, 16), (4, 4, 4), "low-res first layer (C=49)"),
+):
+    chain = cnn.mlp_to_amm(params, cfg, x[:1024], num_codebooks=cbs,
+                           depths=dps)
+    acc = cnn.mlp_accuracy(lambda xb: chain(xb), xt, yt)
+    unpruned = LM.unpruned_chain(
+        chain, [np.asarray(params[f"w{i}"]) for i in range(n_layers)],
+        [np.asarray(params[f"b{i}"]) for i in range(n_layers)])
+    print(f"LUT-MU {tag}: acc {acc:.3f}  "
+          f"LUT bytes {chain.lut_bytes()} (unpruned {unpruned.lut_bytes()}, "
+          f"saving {unpruned.lut_bytes() / chain.lut_bytes():.2f}x)  "
+          f"workload {chain.workload_ops()} ops/row "
+          f"(exact {sum(2 * cfg.sizes[i] * cfg.sizes[i + 1] for i in range(n_layers))})")

@@ -1,0 +1,135 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, from the trip-count-corrected dry-run JSON:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+    memory term     = HLO_bytes_per_device / HBM_bw                [s]
+    collective term = collective_bytes_per_device / ICI link bw    [s]
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (one effective link assumed: conservative).
+
+MODEL_FLOPS (global): train 6·N·D, prefill 2·N·D, decode 2·N·D with
+N = active params (MoE) and D = tokens; the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/redundancy overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (1 effective link, conservative)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "dryrun_results"
+
+
+def model_flops(record: dict) -> float:
+    """Analytic 'useful' FLOPs for the whole step (global, all chips)."""
+    n = record["active_param_count"]
+    d_tokens = record["tokens"]
+    if record["kind"] == "train":
+        return 6.0 * n * d_tokens
+    return 2.0 * n * d_tokens
+
+
+def roofline_terms(record: dict) -> Optional[dict]:
+    if record.get("status") != "ok":
+        return None
+    corr = record.get("corrected") or {
+        "flops_per_device": record["flops_per_device"],
+        "bytes_per_device": record["bytes_per_device"],
+        "collective_bytes_per_device":
+            record["collectives"]["total_bytes"],
+    }
+    chips = record["num_devices"]
+    compute_s = corr["flops_per_device"] / PEAK_FLOPS
+    memory_s = corr["bytes_per_device"] / HBM_BW
+    coll_s = corr["collective_bytes_per_device"] / ICI_BW
+    bound = max(("compute", compute_s), ("memory", memory_s),
+                ("collective", coll_s), key=lambda kv: kv[1])
+    mf = model_flops(record)
+    hlo_global = corr["flops_per_device"] * chips
+    achievable_s = max(compute_s, memory_s, coll_s)
+    # roofline fraction: useful model flops against peak compute for the time
+    # the dominant term pins us down.  Meaningful for compute-heavy kinds;
+    # decode is memory-bound by construction, so we also report memory
+    # efficiency = minimal traffic (args+outputs once) / HLO bytes.
+    mfu_bound = (mf / chips / PEAK_FLOPS) / achievable_s if achievable_s else 0
+    mem = record["memory_analysis"]
+    min_traffic = mem["argument_size_bytes"] + mem["output_size_bytes"]
+    mem_eff = (min_traffic / corr["bytes_per_device"]
+               if corr["bytes_per_device"] else 0.0)
+    return {
+        "arch": record["arch"],
+        "shape": record["shape"],
+        "mesh": record["mesh"],
+        "kind": record["kind"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "bottleneck": bound[0],
+        "bound_s": achievable_s,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": mfu_bound,
+        "memory_efficiency": mem_eff,
+        "temp_gib": record["memory_analysis"]["temp_size_bytes"] / 2**30,
+        "amm": record.get("amm", False),
+    }
+
+
+def load_all(mesh: Optional[str] = None, amm: Optional[bool] = None
+             ) -> List[dict]:
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS_DIR / "*.json"))):
+        rec = json.loads(Path(f).read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if amm is not None and rec.get("amm", False) != amm:
+            continue
+        t = roofline_terms(rec)
+        if t is None:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh"), "skipped": True,
+                         "reason": rec.get("reason")})
+        else:
+            rows.append(t)
+    return rows
+
+
+def format_table(rows: List[dict]) -> str:
+    hdr = (f"{'arch':25s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'bound':>10s} "
+           f"{'useful':>7s} {'roofl%':>7s} {'mem_eff':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"{r['arch']:25s} {r['shape']:12s} "
+                         f"{r.get('mesh') or '':8s} {'— skipped: ' + (r.get('reason') or '')}")
+            continue
+        lines.append(
+            f"{r['arch']:25s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {r['bottleneck']:>10s} "
+            f"{r['useful_ratio']:7.3f} {100 * r['roofline_fraction']:6.1f}% "
+            f"{r['memory_efficiency']:8.3f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--amm", action="store_true")
+    args = ap.parse_args()
+    rows = load_all(mesh=args.mesh, amm=args.amm if args.amm else None)
+    print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

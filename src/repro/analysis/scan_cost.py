@@ -1,0 +1,438 @@
+"""Trip-count-aware cost assembly.
+
+XLA's ``cost_analysis()`` counts a ``while`` (scan) body **once**, no matter
+the trip count — a 62-layer scanned transformer reports ≈1 layer of FLOPs.
+We therefore compile each scan body *standalone* under the same mesh and
+shardings and assemble
+
+    true_cost = module_cost + Σ_loops (trips − 1) × body_cost
+
+(the module already contains each body once).  The train step has two loops
+(forward scan + backward scan whose remat body = fwd-recompute + bwd); we
+measure the fwd body and the vjp body separately.
+
+Inner sequence loops (attention KV chunks) are python-unrolled in the model
+(`attention._chunked_attention`), so bodies here are scan-free except the
+Mamba inter-chunk state recurrence, whose per-trip cost (a (B,nh,N,P)
+multiply-add) is ≤1e-4 of a block and is ignored (documented).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo_stats import collective_bytes_from_hlo
+from repro.distributed.sharding import (MeshAxes, make_constrainer,
+                                        param_shardings)
+from repro.launch.shapes import ShapeCell
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import model as MD
+from repro.models import moe as MOE
+from repro.models import amm_mlp as AMM
+from repro.models.config import ModelConfig
+
+
+def _measure(fn, arg_shapes, arg_shardings, mesh) -> dict:
+    # unroll the attention chunk loop so cost_analysis sees every chunk
+    with mesh, A.unroll_chunks():
+        jitted = jax.jit(fn, in_shardings=arg_shardings)
+        compiled = jitted.lower(*arg_shapes).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": int(coll["total_bytes"]),
+        "collectives": coll,
+    }
+
+
+def _act_sharding(mesh: Mesh, b: int, s: int) -> NamedSharding:
+    axes = MeshAxes.for_mesh(mesh)
+    dp_ax = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+    return NamedSharding(mesh, P(
+        dp_ax if b % axes.dp_size(mesh) == 0 else None,
+        axes.tp if (s % axes.tp_size(mesh) == 0 and s > 1) else None,
+        None))
+
+
+def _kv_sharding(mesh: Mesh, b: int, s: int, nkv: int) -> NamedSharding:
+    """Per-layer KV slice sharding — mirrors sharding.cache_shardings."""
+    axes = MeshAxes.for_mesh(mesh)
+    dp_ax = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+    dp_n, tp_n = axes.dp_size(mesh), axes.tp_size(mesh)
+    seq_shard = b % dp_n != 0
+    kv_tp = nkv % tp_n == 0
+    if not seq_shard:
+        ent = [dp_ax if b % dp_n == 0 else None,
+               None if kv_tp else (axes.tp if s % tp_n == 0 else None),
+               axes.tp if kv_tp else None, None]
+    elif kv_tp:
+        ent = [None, dp_ax if s % dp_n == 0 else None, axes.tp, None]
+    else:
+        both = axes.dp + (axes.tp,)
+        ok = s % (dp_n * tp_n) == 0
+        ent = [None, both if ok else (dp_ax if s % dp_n == 0 else None),
+               None, None]
+    return NamedSharding(mesh, P(*ent))
+
+
+def _rep(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _block_template(cfg: ModelConfig, dtype, serving: bool):
+    """Un-stacked per-layer param shapes (uniform families)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        lambda k: MD._init_block(cfg, k, cfg.moe_offset, dtype, serving), key)
+
+
+def _hybrid_template(cfg: ModelConfig, dtype, serving: bool):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: {
+        f"pos{p}": MD._init_block(cfg, jax.random.fold_in(k, p), p, dtype,
+                                  serving)
+        for p in range(cfg.attn_every)}, key)
+
+
+def _micro_step_body(cfg, cell, mesh, constrain, b_micro, accum) -> dict:
+    """Whole-microbatch fwd+bwd (embed/head/loss + layer bodies once) —
+    measured via the real loss_fn so the stem cost is counted per micro."""
+    from repro.runtime.steps import make_loss_fn
+    sds = jax.ShapeDtypeStruct
+    loss_fn = make_loss_fn(cfg, constrain, remat=True)
+    params_shape = jax.eval_shape(
+        lambda k: MD.init_params(cfg, k, jnp.float32), jax.random.PRNGKey(0))
+    p_full_sh = param_shardings(params_shape, cfg, mesh)
+    mb_spec = {
+        "tokens": sds((b_micro, cell.seq_len), jnp.int32),
+        "labels": sds((b_micro, cell.seq_len), jnp.int32),
+    }
+    if cfg.family == "vlm" or cfg.is_encdec:
+        mb_spec["frontend"] = sds(
+            (b_micro, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    mb_sh = {k: _rep(mesh) for k in mb_spec}
+
+    def micro_body(params, mb):
+        return jax.value_and_grad(loss_fn)(params, mb)
+
+    m3 = _measure(micro_body, (params_shape, mb_spec), (p_full_sh, mb_sh),
+                  mesh)
+    return {"name": "micro_step", "trips": accum, "extra": accum - 1, **m3}
+
+
+def body_costs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> List[dict]:
+    """Measure every scanned body of this cell's program.
+
+    Returns a list of {"name", "trips", "flops", "bytes", "collective_bytes"}.
+    """
+    constrain = make_constrainer(cfg, mesh)
+    b = cell.global_batch
+    s = cell.seq_len
+    kind = cell.kind
+    train = kind == "train"
+    accum = max(int(cfg.grad_accum), 1) if train else 1
+    b_micro = b // accum if train else b
+    dtype = jnp.float32 if train else jnp.bfloat16
+    cd = jnp.bfloat16
+    d = cfg.d_model
+    out: List[dict] = []
+    sds = jax.ShapeDtypeStruct
+
+    win_spec = sds((), jnp.int32)
+    win_sh = _rep(mesh)
+
+    if cfg.is_hybrid:
+        tmpl = _hybrid_template(cfg, dtype, serving=not train)
+        trips = cfg.num_layers // cfg.attn_every
+
+        def fwd(h, lps, win):
+            positions = jnp.broadcast_to(jnp.arange(h.shape[1]),
+                                         (h.shape[0], h.shape[1]))
+
+            def one(hh, lp, p):
+                return MD._block_apply(cfg, lp, hh, positions, win,
+                                       constrain, p)
+
+            for p in range(cfg.attn_every):
+                # mirror the per-layer remat of _run_hybrid_stack so the vjp
+                # measurement includes the recompute flops
+                fn = jax.checkpoint(
+                    one, static_argnums=(2,),
+                    policy=jax.checkpoint_policies.nothing_saveable)
+                h = fn(h, lps[f"pos{p}"], p)
+            return h
+    elif cfg.is_encdec:
+        tmpl = None  # handled separately below
+        trips = cfg.num_layers
+        fwd = None
+    else:
+        tmpl = _block_template(cfg, dtype, serving=not train)
+        trips = cfg.num_layers
+
+        def fwd(h, lp, win):
+            positions = jnp.broadcast_to(jnp.arange(h.shape[1]),
+                                         (h.shape[0], h.shape[1]))
+            return MD._block_apply(cfg, lp, h, positions, win, constrain, 0)
+
+    if kind in ("train", "prefill") and not cfg.is_encdec:
+        h_spec = sds((b_micro, s, d), cd)
+        h_sh = _act_sharding(mesh, b_micro, s)
+        p_sh = param_shardings(tmpl, cfg, mesh)
+        # extras: see corrected_totals — with A microbatches the true block
+        # execution count is A·L; the module counts it once and the micro
+        # body (when A>1) once more per its own extra.
+        blk_extra = accum * (trips - 1) if accum > 1 else (trips - 1)
+        m = _measure(fwd, (h_spec, tmpl, win_spec), (h_sh, p_sh, win_sh), mesh)
+        out.append({"name": "block_fwd", "trips": trips, "extra": blk_extra,
+                    **m})
+        if train:
+            def vjp_body(h, lp, win, ct):
+                _, pull = jax.vjp(lambda hh, pp: fwd(hh, pp, win), h, lp)
+                return pull(ct)
+            m2 = _measure(vjp_body, (h_spec, tmpl, win_spec, h_spec),
+                          (h_sh, p_sh, win_sh, h_sh), mesh)
+            out.append({"name": "block_vjp", "trips": trips,
+                        "extra": blk_extra, **m2})
+            if accum > 1:
+                out.append(_micro_step_body(cfg, cell, mesh, constrain,
+                                            b_micro, accum))
+        return out
+
+    if cfg.is_encdec:
+        # encoder block + decoder block, fwd (and vjp when training)
+        t_enc = cfg.num_frontend_tokens
+        key = jax.random.PRNGKey(0)
+        enc_tmpl = jax.eval_shape(
+            lambda k: MD._init_encoder_block(cfg, k, dtype), key)
+        dec_tmpl = jax.eval_shape(
+            lambda k: MD._init_decdec_block(cfg, k, 0, dtype), key)
+        enc_sh = param_shardings(enc_tmpl, cfg, mesh)
+        dec_sh = param_shardings(dec_tmpl, cfg, mesh)
+
+        def enc_fwd(h, lp):
+            t = h.shape[1]
+            a_out = A.attention(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                cfg, positions=jnp.arange(t)[None],
+                                causal=False, window=None, constrain=constrain)
+            h = h + a_out
+            mm = lp["mlp"]
+            o = L.gated_mlp(L.rms_norm(h, lp["ln2"], cfg.norm_eps),
+                            mm["w_gate"].astype(h.dtype), mm["w_up"].astype(h.dtype),
+                            mm["w_down"].astype(h.dtype), cfg.act)
+            return constrain(h + o, "activation")
+
+        def dec_fwd(h, lp, enc):
+            positions = jnp.broadcast_to(jnp.arange(h.shape[1]),
+                                         (h.shape[0], h.shape[1]))
+            a_out = A.attention(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                cfg, positions=positions, window=None,
+                                constrain=constrain)
+            h = h + a_out
+            c_out = A.cross_attention(lp["cross"],
+                                      L.rms_norm(h, lp["ln_cross"], cfg.norm_eps),
+                                      enc, cfg, constrain=constrain)
+            h = h + c_out
+            mm = lp["mlp"]
+            o = L.gated_mlp(L.rms_norm(h, lp["ln2"], cfg.norm_eps),
+                            mm["w_gate"].astype(h.dtype), mm["w_up"].astype(h.dtype),
+                            mm["w_down"].astype(h.dtype), cfg.act)
+            return constrain(h + o, "activation")
+
+        if kind == "decode":
+            # encoder not run at decode; handled by decode section below
+            pass
+        else:
+            enc_extra = (accum * (cfg.encoder_layers - 1) if accum > 1
+                         else cfg.encoder_layers - 1)
+            dec_extra = (accum * (cfg.num_layers - 1) if accum > 1
+                         else cfg.num_layers - 1)
+            he_spec = sds((b_micro, t_enc, d), cd)
+            he_sh = _act_sharding(mesh, b_micro, t_enc)
+            m = _measure(enc_fwd, (he_spec, enc_tmpl), (he_sh, enc_sh), mesh)
+            out.append({"name": "enc_fwd", "trips": cfg.encoder_layers,
+                        "extra": enc_extra, **m})
+            hd_spec = sds((b_micro, s, d), cd)
+            hd_sh = _act_sharding(mesh, b_micro, s)
+            m = _measure(dec_fwd, (hd_spec, dec_tmpl, he_spec),
+                         (hd_sh, dec_sh, he_sh), mesh)
+            out.append({"name": "dec_fwd", "trips": cfg.num_layers,
+                        "extra": dec_extra, **m})
+            if train:
+                def enc_vjp(h, lp, ct):
+                    _, pull = jax.vjp(enc_fwd, h, lp)
+                    return pull(ct)
+                m = _measure(enc_vjp, (he_spec, enc_tmpl, he_spec),
+                             (he_sh, enc_sh, he_sh), mesh)
+                out.append({"name": "enc_vjp", "trips": cfg.encoder_layers,
+                            "extra": enc_extra, **m})
+
+                def dec_vjp(h, lp, enc, ct):
+                    _, pull = jax.vjp(dec_fwd, h, lp, enc)
+                    return pull(ct)
+                m = _measure(dec_vjp, (hd_spec, dec_tmpl, he_spec, hd_spec),
+                             (hd_sh, dec_sh, he_sh, hd_sh), mesh)
+                out.append({"name": "dec_vjp", "trips": cfg.num_layers,
+                            "extra": dec_extra, **m})
+                if accum > 1:
+                    out.append(_micro_step_body(cfg, cell, mesh, constrain,
+                                                b_micro, accum))
+            return out
+
+    # ---- decode bodies -----------------------------------------------------
+    nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    h_spec = sds((b, 1, d), cd)
+    h_sh = _act_sharding(mesh, b, 1)
+    pos_spec = sds((), jnp.int32)
+
+    if cfg.family == "ssm":
+        mc = jax.eval_shape(lambda: MB.init_mamba_cache(cfg, b, cd))
+        mc_sh = jax.tree.map(lambda _: _rep(mesh), mc)
+
+        def dec_body(h, lp, cache, pos):
+            o, nc = MB.mamba_decode_step(
+                lp["mamba"], L.rms_norm(h, lp["ln1"], cfg.norm_eps), cfg, cache)
+            return h + o, nc
+
+        m = _measure(dec_body, (h_spec, tmpl, mc, pos_spec),
+                     (h_sh, param_shardings(tmpl, cfg, mesh), mc_sh, _rep(mesh)),
+                     mesh)
+        out.append({"name": "decode_block", "trips": cfg.num_layers, **m})
+        return out
+
+    kv_spec = sds((b, s, nkv, hd), cd)
+    kv_sh = _kv_sharding(mesh, b, s, nkv)
+
+    if cfg.is_hybrid:
+        caches = {}
+        caches_sh = {}
+        for p in range(cfg.attn_every):
+            if cfg.layer_is_attn(p):
+                caches[f"pos{p}"] = {"k": kv_spec, "v": kv_spec}
+                caches_sh[f"pos{p}"] = {"k": kv_sh, "v": kv_sh}
+            else:
+                mc = jax.eval_shape(lambda: MB.init_mamba_cache(cfg, b, cd))
+                caches[f"pos{p}"] = {"mamba": mc}
+                caches_sh[f"pos{p}"] = {"mamba": jax.tree.map(
+                    lambda _: _rep(mesh), mc)}
+
+        def dec_body(h, lps, caches, pos):
+            for p in range(cfg.attn_every):
+                lp = lps[f"pos{p}"]
+                cc = caches[f"pos{p}"]
+                if "mamba" in lp:
+                    o, _ = MB.mamba_decode_step(
+                        lp["mamba"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                        cfg, cc["mamba"])
+                else:
+                    o, _ = A.decode_step(
+                        lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                        cfg, cc["k"], cc["v"], pos, None)
+                h = h + o
+                mlp_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+                if "moe" in lp:
+                    o = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
+                elif "amm_mlp" in lp:
+                    o = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+                else:
+                    mm = lp["mlp"]
+                    o = L.gated_mlp(mlp_in, mm["w_gate"].astype(cd),
+                                    mm["w_up"].astype(cd),
+                                    mm["w_down"].astype(cd), cfg.act)
+                h = h + o
+            return h
+
+        m = _measure(dec_body, (h_spec, tmpl, caches, pos_spec),
+                     (h_sh, param_shardings(tmpl, cfg, mesh), caches_sh,
+                      _rep(mesh)), mesh)
+        out.append({"name": "decode_group",
+                    "trips": cfg.num_layers // cfg.attn_every, **m})
+        return out
+
+    if cfg.is_encdec:
+        dec_tmpl = jax.eval_shape(
+            lambda k: MD._init_decdec_block(cfg, k, 0, jnp.bfloat16),
+            jax.random.PRNGKey(0))
+        xk_spec = sds((b, cfg.num_frontend_tokens, nkv, hd), cd)
+
+        def dec_body(h, lp, ck, cv, xk, xv, pos):
+            o, _ = A.decode_step(
+                lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                ck, cv, pos, None)
+            h = h + o
+            qx = L.rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+            nq = cfg.num_heads
+            q = (qx @ lp["cross"]["wq"].astype(cd)).reshape(b, 1, nq, hd)
+            qg = A._grouped(q, nkv)
+            lg = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                            xk.astype(jnp.float32)) / np.sqrt(hd)
+            w = jax.nn.softmax(lg, axis=-1)
+            c_out = jnp.einsum("bngst,btnh->bsngh", w, xv.astype(jnp.float32))
+            c_out = (c_out.reshape(b, 1, nq * hd).astype(cd)
+                     @ lp["cross"]["wo"].astype(cd))
+            h = h + c_out
+            mm = lp["mlp"]
+            o = L.gated_mlp(L.rms_norm(h, lp["ln2"], cfg.norm_eps),
+                            mm["w_gate"].astype(cd), mm["w_up"].astype(cd),
+                            mm["w_down"].astype(cd), cfg.act)
+            return h + o
+
+        m = _measure(
+            dec_body,
+            (h_spec, dec_tmpl, kv_spec, kv_spec, xk_spec, xk_spec, pos_spec),
+            (h_sh, param_shardings(dec_tmpl, cfg, mesh), kv_sh, kv_sh,
+             _rep(mesh), _rep(mesh), _rep(mesh)), mesh)
+        out.append({"name": "decode_block", "trips": cfg.num_layers, **m})
+        return out
+
+    windows = None
+
+    def dec_body(h, lp, ck, cv, win, pos):
+        o, _ = A.decode_step(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                             cfg, ck, cv, pos, win)
+        h = constrain(h + o, "activation")
+        mlp_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            o = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
+        elif "amm_mlp" in lp:
+            o = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+        else:
+            mm = lp["mlp"]
+            o = L.gated_mlp(mlp_in, mm["w_gate"].astype(cd),
+                            mm["w_up"].astype(cd), mm["w_down"].astype(cd),
+                            cfg.act)
+        return constrain(h + o, "activation")
+
+    m = _measure(dec_body, (h_spec, tmpl, kv_spec, kv_spec, win_spec, pos_spec),
+                 (h_sh, param_shardings(tmpl, cfg, mesh), kv_sh, kv_sh,
+                  win_sh, _rep(mesh)), mesh)
+    out.append({"name": "decode_block", "trips": cfg.num_layers, **m})
+    return out
+
+
+def corrected_totals(module_record: dict, bodies: List[dict]) -> dict:
+    """Assemble trip-count-corrected totals.
+
+    Each body carries an ``extra`` multiplier (how many more times it runs
+    than the once the module's cost_analysis counted).  Plain stacks use
+    ``trips − 1``; gradient-accumulated training uses
+    ``module + (A−1)·micro + A·(L−1)·(fwd+vjp)`` (see body_costs).
+    """
+    flops = module_record["flops_per_device"]
+    byts = module_record["bytes_per_device"]
+    coll = module_record["collectives"]["total_bytes"]
+    for body in bodies:
+        k = body.get("extra", body["trips"] - 1)
+        flops += k * body["flops"]
+        byts += k * body["bytes"]
+        coll += k * body["collective_bytes"]
+    return {"flops_per_device": flops, "bytes_per_device": byts,
+            "collective_bytes_per_device": coll}

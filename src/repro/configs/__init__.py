@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher.
+
+10 assigned architectures + the paper's own case-study models (ResNet-9 /
+SFC MLP, which live in ``repro.models.cnn`` at example scale).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "qwen2.5-32b": "repro.configs.qwen25_32b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.reduced() if reduced else mod.CONFIG

@@ -1,0 +1,34 @@
+"""LUT-MU core: MADDNESS product quantisation + the paper's pruning
+optimisations, as composable JAX modules."""
+
+from repro.core.maddness import (  # noqa: F401
+    HashTree,
+    MaddnessParams,
+    aggregate,
+    aggregate_onehot,
+    build_lut,
+    encode,
+    encode_onehot,
+    fit_maddness,
+    gather_split_values,
+    learn_hash_trees,
+    learn_prototypes,
+    maddness_matmul,
+    maddness_matmul_onehot,
+)
+from repro.core.lut_mu import (  # noqa: F401
+    AMMChain,
+    AMMLinear,
+    fit_amm_chain,
+    fit_amm_linear,
+    unpruned_chain,
+)
+from repro.core.pruning import (  # noqa: F401
+    PruningPlan,
+    plan_from_consumer_tree,
+    prune_activations,
+    prune_lut,
+    pruned_param_bytes,
+    pruned_to_split_values,
+    workload_ops,
+)

@@ -1,0 +1,99 @@
+"""Im2col / Kn2col convolution lowering for LUT-MU (paper Section V-A4, Fig. 5).
+
+Im2col flattens each K×K×D_in window into one vector (codebooks of length
+K·K per input channel in the original Halutmatmul), which scatters split
+dims across channels/windows and defeats pruning.  Kn2col instead treats a
+window as K² *channel vectors*: the convolution becomes K² independent
+(H·W, D_in) × (D_in, D_out) matmuls (one per kernel tap, on shifted feature
+maps) whose results are summed — each tap-matmul is a standard LUT-MU with
+codebooks along channels, so split dims concentrate per-channel and the
+pruning optimisations apply.
+
+Both lowerings are provided; both are validated against
+``jax.lax.conv_general_dilated``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def im2col_patches(x: Array, k: int, stride: int = 1, padding: str = "SAME") -> Array:
+    """(B, H, W, D_in) → (B, H_out, W_out, K*K*D_in) unfolded windows."""
+    b, h, w, d = x.shape
+    if padding == "SAME":
+        pad = (k - 1) // 2
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    h_out = (x.shape[1] - k) // stride + 1
+    w_out = (x.shape[2] - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = x[:, ky : ky + h_out * stride : stride,
+                   kx : kx + w_out * stride : stride, :]
+            cols.append(sl)
+    return jnp.concatenate(cols, axis=-1)  # taps-major ordering (ky, kx, d)
+
+
+def conv_im2col(x: Array, w: Array, stride: int = 1, padding: str = "SAME",
+                matmul: Optional[Callable[[Array, Array], Array]] = None) -> Array:
+    """Convolution via Im2col.  ``w``: (K, K, D_in, D_out).
+
+    ``matmul(flat_x, flat_w)`` lets callers swap in a LUT-MU; defaults to
+    exact ``@``.
+    """
+    k = w.shape[0]
+    patches = im2col_patches(x, k, stride, padding)
+    b, ho, wo, dk = patches.shape
+    flat_w = w.reshape(-1, w.shape[-1])  # (K*K*D_in, D_out), same tap order
+    mm = matmul if matmul is not None else (lambda a, bm: a @ bm)
+    out = mm(patches.reshape(-1, dk), flat_w)
+    return out.reshape(b, ho, wo, -1)
+
+
+def conv_kn2col(x: Array, w: Array, stride: int = 1, padding: str = "SAME",
+                tap_matmuls: Optional[Sequence[Callable[[Array], Array]]] = None
+                ) -> Array:
+    """Convolution via Kn2col: K² shifted 1×1 matmuls, summed.
+
+    ``tap_matmuls[t](rows)`` (t = ky*K+kx) lets callers substitute one LUT-MU
+    per kernel tap (each a (·, D_in) × (D_in, D_out) product); defaults to
+    exact ``rows @ w[ky, kx]``.
+    """
+    b, h, wd, d_in = x.shape
+    k = w.shape[0]
+    if padding == "SAME":
+        pad = (k - 1) // 2
+        xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    else:
+        xp = x
+    h_out = (xp.shape[1] - k) // stride + 1
+    w_out = (xp.shape[2] - k) // stride + 1
+    out = None
+    for ky in range(k):
+        for kx in range(k):
+            sl = xp[:, ky : ky + h_out * stride : stride,
+                    kx : kx + w_out * stride : stride, :]
+            rows = sl.reshape(-1, d_in)
+            t = ky * k + kx
+            if tap_matmuls is not None:
+                part = tap_matmuls[t](rows)
+            else:
+                part = rows @ w[ky, kx]
+            part = part.reshape(b, h_out, w_out, -1)
+            out = part if out is None else out + part
+    return out
+
+
+def conv_reference(x: Array, w: Array, stride: int = 1,
+                   padding: str = "SAME") -> Array:
+    """XLA reference convolution (NHWC, HWIO)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,329 @@
+"""LUT-MU: the paper's pruned LUT-based approximate matmul unit.
+
+Composable JAX modules:
+
+  * :class:`AMMLinear`  — one LUT-MU (allocator → encoder → aggregator), a
+    drop-in replacement for ``x @ W + b`` with optional *parameter-pruned*
+    output (when the consumer is another AMMLinear);
+  * :class:`AMMChain`   — a cascade of AMMLinears with *data-pruned* hand-off
+    between them (the paper's Fig. 4 dataflow), with optional elementwise
+    non-linear ops between stages (dimension-preserving, so pruning commutes);
+  * :func:`fit_amm_linear` / :func:`fit_amm_chain` — offline training drivers.
+
+Numerics contract (tested): a pruned chain's surviving values are
+bit-identical to the unpruned chain's values at the kept dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import maddness as M
+from repro.core import pruning as P
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AMMLinear:
+    """One LUT-MU.  ``out_plan`` present ⇒ this unit emits the pruned,
+    cluster-ordered package for the next unit instead of the full output."""
+
+    params: M.MaddnessParams
+    out_plan: Optional[P.PruningPlan]  # pruning of *our output*
+    full_out_features: int  # D_out before parameter pruning (static)
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.params, self.out_plan), (self.full_out_features,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    # -- shapes -------------------------------------------------------------
+    @property
+    def num_codebooks(self) -> int:
+        return self.params.tree.num_codebooks
+
+    @property
+    def depth(self) -> int:
+        return self.params.tree.depth
+
+    @property
+    def is_pruned(self) -> bool:
+        return self.out_plan is not None
+
+    # -- forward ------------------------------------------------------------
+    def encode_full(self, x: Array) -> Array:
+        """(B, D) full-width input → (B, C, I) split values (data pruning)."""
+        return M.gather_split_values(x, self.params.tree)
+
+    def encode_package(self, x_pruned: Array, plan: P.PruningPlan) -> Array:
+        """Cluster-ordered package from the previous LUT-MU → split values."""
+        return P.pruned_to_split_values(x_pruned, plan)
+
+    def __call__(self, x: Array, *, use_onehot: bool = True) -> Array:
+        """Full-width input path."""
+        xs = self.encode_full(x)
+        return self._aggregate(xs, use_onehot)
+
+    def apply_package(self, x_pruned: Array, *, use_onehot: bool = True) -> Array:
+        """Pruned-package input path (chained mode)."""
+        plan = P.PruningPlan(
+            keep_idx=jnp.zeros((0,), jnp.int32),  # unused
+            consumer_codebooks=self.num_codebooks,
+            consumer_depth=self.depth,
+        )
+        xs = self.encode_package(x_pruned, plan)
+        return self._aggregate(xs, use_onehot)
+
+    def _aggregate(self, x_split: Array, use_onehot: bool) -> Array:
+        p = self.params
+        if use_onehot:
+            onehot = M.encode_onehot(x_split, p.tree)
+            if p.lut.dtype == jnp.int8:
+                oh = onehot.astype(jnp.int8).reshape(onehot.shape[0], -1)
+                acc = jax.lax.dot_general(
+                    oh, p.lut.reshape(-1, p.lut.shape[-1]),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                return acc.astype(jnp.float32) * p.lut_scale + p.lut_offset
+            return M.aggregate_onehot(onehot, p.lut, p.lut_scale, p.lut_offset)
+        codes = M.encode(x_split, p.tree)
+        return M.aggregate(codes, p.lut, p.lut_scale, p.lut_offset)
+
+    # -- resource accounting (paper Figs. 11/12) -----------------------------
+    def lut_bytes(self) -> int:
+        return int(np.prod(self.params.lut.shape)) * self.params.lut.dtype.itemsize
+
+    def workload_ops(self) -> int:
+        return P.workload_ops(self.num_codebooks, self.depth,
+                              self.params.lut.shape[-1])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AMMChain:
+    """Cascaded LUT-MUs with pruned hand-off (paper Fig. 4).
+
+    ``activations[i]`` is the elementwise fn applied between stage *i* and
+    *i+1* (identity if None) — it acts on the *pruned package*, which is
+    valid because elementwise ops neither hide nor move split dims
+    (Section V-A1).
+    """
+
+    layers: List[AMMLinear]
+    activation_names: Tuple[Optional[str], ...]  # static; len == len(layers)-1
+
+    _ACTS = {
+        None: lambda x: x,
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+    }
+
+    def tree_flatten(self):
+        return (self.layers,), (self.activation_names,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(list(children[0]), aux[0])
+
+    def __call__(self, x: Array, *, use_onehot: bool = True) -> Array:
+        h = self.layers[0](x, use_onehot=use_onehot)
+        for i, layer in enumerate(self.layers[1:]):
+            h = self._ACTS[self.activation_names[i]](h)
+            h = layer.apply_package(h, use_onehot=use_onehot)
+        return h
+
+    def lut_bytes(self) -> int:
+        return sum(l.lut_bytes() for l in self.layers)
+
+    def workload_ops(self) -> int:
+        return sum(l.workload_ops() for l in self.layers)
+
+
+# ---------------------------------------------------------------------------
+# Offline training drivers.
+# ---------------------------------------------------------------------------
+
+
+def fit_amm_linear(
+    calib_x: np.ndarray,
+    weight: np.ndarray,
+    bias: Optional[np.ndarray],
+    num_codebooks: int,
+    depth: int = 4,
+    out_plan: Optional[P.PruningPlan] = None,
+    quantize_int8: bool = False,
+    optimize_prototypes: bool = True,
+    seed: int = 0,
+) -> AMMLinear:
+    """Fit one LUT-MU; if ``out_plan`` is given the LUT is parameter-pruned."""
+    params = M.fit_maddness(
+        calib_x, weight, num_codebooks, depth=depth, bias=bias,
+        quantize_int8=quantize_int8, optimize_prototypes=optimize_prototypes,
+        seed=seed,
+    )
+    full_out = weight.shape[1]
+    if out_plan is not None:
+        lut, offset = P.prune_lut(params.lut, params.lut_offset, out_plan)
+        scale = params.lut_scale
+        if scale.ndim:  # per-column scales must be pruned too
+            scale = scale[out_plan.keep_idx]
+        params = M.MaddnessParams(params.tree, params.prototypes, lut, scale, offset)
+    return AMMLinear(params=params, out_plan=out_plan, full_out_features=full_out)
+
+
+def fit_amm_chain(
+    calib_x: np.ndarray,
+    weights: Sequence[np.ndarray],
+    biases: Sequence[Optional[np.ndarray]],
+    num_codebooks: Sequence[int],
+    depths: Sequence[int],
+    activations: Sequence[Optional[str]] = (),
+    quantize_int8: bool = False,
+    optimize_prototypes: bool = True,
+    seed: int = 0,
+) -> AMMChain:
+    """Fit a cascade layer-by-layer, propagating *approximate* activations
+    (the paper's layer-wise retraining order) and wiring pruning plans.
+
+    Stage *i*'s tree is trained on the (approximate) full-width activations
+    reaching it; then stage *i-1*'s LUT is pruned to stage *i*'s plan.
+    """
+    n_layers = len(weights)
+    acts = tuple(activations) if activations else (None,) * (n_layers - 1)
+    assert len(acts) == n_layers - 1
+
+    _act = {None: lambda v: v, "relu": lambda v: np.maximum(v, 0.0),
+            "gelu": lambda v: np.asarray(jax.nn.gelu(jnp.asarray(v))),
+            "silu": lambda v: np.asarray(jax.nn.silu(jnp.asarray(v)))}
+
+    # Pass 1: fit every stage unpruned on propagated activations.
+    stage_params: List[M.MaddnessParams] = []
+    x = np.asarray(calib_x, np.float64)
+    for i in range(n_layers):
+        p = M.fit_maddness(
+            x, weights[i], num_codebooks[i], depth=depths[i], bias=biases[i],
+            quantize_int8=quantize_int8,
+            optimize_prototypes=optimize_prototypes, seed=seed + i,
+        )
+        stage_params.append(p)
+        if i < n_layers - 1:
+            y = np.asarray(M.maddness_matmul(jnp.asarray(x, jnp.float32), p))
+            x = _act[acts[i]](y).astype(np.float64)
+
+    # Pass 2: prune each stage's LUT to the next stage's plan.
+    layers: List[AMMLinear] = []
+    for i, p in enumerate(stage_params):
+        full_out = weights[i].shape[1]
+        plan = None
+        if i < n_layers - 1:
+            nxt = stage_params[i + 1]
+            plan = P.plan_from_consumer_tree(nxt.tree, consumer_in_dim=full_out)
+            lut, offset = P.prune_lut(p.lut, p.lut_offset, plan)
+            scale = p.lut_scale
+            if scale.ndim:
+                scale = scale[plan.keep_idx]
+            p = M.MaddnessParams(p.tree, p.prototypes, lut, scale, offset)
+        layers.append(AMMLinear(params=p, out_plan=plan, full_out_features=full_out))
+    return AMMChain(layers=layers, activation_names=acts)
+
+
+def retrain_chain(
+    chain: AMMChain,
+    weights: Sequence[np.ndarray],
+    biases: Sequence[Optional[np.ndarray]],
+    calib_x: np.ndarray,
+    steps: int = 150,
+    lr: float = 0.3,
+) -> AMMChain:
+    """Layer-wise LUT retraining (the paper's accuracy-recovery procedure,
+    via [25]'s strategy).
+
+    Stage by stage: propagate the *approximate* full-width activations of
+    the retrained prefix, fine-tune the stage's **unpruned** LUT so its
+    output matches the exact matmul of that (approximate) input — this
+    compensates the cascade drift Tang et al. observed — then re-apply
+    parameter pruning.  Retraining the unpruned table and pruning after is
+    exact: pruned columns are a subset, and their gradients under the
+    column-separable MSE are identical.
+    """
+    import jax
+
+    x = jnp.asarray(calib_x, jnp.float32)
+    new_layers: List[AMMLinear] = []
+    for i, layer in enumerate(chain.layers):
+        p = layer.params
+        w = jnp.asarray(weights[i], jnp.float32)
+        b = (jnp.zeros((w.shape[1],), jnp.float32) if biases[i] is None
+             else jnp.asarray(biases[i], jnp.float32))
+        target = x @ w + b  # exact matmul on the approximate input
+
+        # start from the float, *unpruned* LUT (bias folded into entries of
+        # codebook 0 so the retrained table is self-contained)
+        lut_f, _, _ = M.build_lut(p.prototypes, w, None, quantize_int8=False)
+        lut_f = lut_f.at[0].add(b)
+
+        onehot = M.encode_onehot(M.gather_split_values(x, p.tree), p.tree)
+        n_out = lut_f.shape[-1]
+
+        def loss_fn(lut_):
+            y = M.aggregate_onehot(onehot, lut_, jnp.ones(()),
+                                   jnp.zeros((n_out,)))
+            return jnp.mean((y - target) ** 2)
+
+        @jax.jit
+        def step_fn(lut_):
+            l, g = jax.value_and_grad(loss_fn)(lut_)
+            return lut_ - lr * g, l
+
+        for _ in range(steps):
+            lut_f, _ = step_fn(lut_f)
+
+        # propagate approximate full-width activations for the next stage
+        y_full = M.aggregate_onehot(onehot, lut_f, jnp.ones(()),
+                                    jnp.zeros((n_out,)))
+        if i < len(chain.layers) - 1:
+            x = AMMChain._ACTS[chain.activation_names[i]](y_full)
+
+        lut_new, offset_new = lut_f, jnp.zeros((n_out,))
+        if layer.out_plan is not None:
+            lut_new = lut_f[..., layer.out_plan.keep_idx]
+            offset_new = offset_new[layer.out_plan.keep_idx]
+        new_p = M.MaddnessParams(p.tree, p.prototypes, lut_new,
+                                 jnp.ones(()), offset_new)
+        new_layers.append(AMMLinear(params=new_p, out_plan=layer.out_plan,
+                                    full_out_features=layer.full_out_features))
+    return AMMChain(layers=new_layers, activation_names=chain.activation_names)
+
+
+def unpruned_chain(chain: AMMChain, weights: Sequence[np.ndarray],
+                   biases: Sequence[Optional[np.ndarray]]) -> AMMChain:
+    """Rebuild ``chain`` with full (unpruned) LUTs — the MADDNESS baseline.
+
+    Shares the trees/prototypes so that pruned-vs-unpruned comparisons are
+    apples-to-apples (same encode, different parameter footprint).
+    """
+    layers = []
+    for i, layer in enumerate(chain.layers):
+        p = layer.params
+        lut, scale, offset = M.build_lut(
+            p.prototypes, jnp.asarray(weights[i], jnp.float32),
+            None if biases[i] is None else jnp.asarray(biases[i], jnp.float32),
+            quantize_int8=p.lut.dtype == jnp.int8,
+        )
+        layers.append(AMMLinear(
+            params=M.MaddnessParams(p.tree, p.prototypes, lut, scale, offset),
+            out_plan=None,
+            full_out_features=layer.full_out_features,
+        ))
+    return AMMChain(layers=layers, activation_names=chain.activation_names)

@@ -1,0 +1,125 @@
+"""LUT-MU pruning optimisations (the paper's core contribution, Section V-A).
+
+Three transforms on cascaded MADDNESS matmuls:
+
+  1. **data pruning** — layer *i* only materialises the split dims that layer
+     *i+1*'s encode reads (inter-layer redundancy elimination);
+  2. **data reshape** — those values are emitted in *cluster order*: cluster
+     ``l`` holds the level-``l`` split value of every consumer codebook, so
+     the consumer's tree walk streams without gathers;
+  3. **parameter pruning** — only the LUT columns producing those dims are
+     stored (intra-layer redundancy elimination): the LUT shrinks from
+     ``(C, G, D_out)`` to ``(C, G, I'·C')``.
+
+The key algebraic fact (and our central test invariant): pruning is
+*lossless* — the surviving values are bit-identical to the unpruned chain's
+values at the same dims, so chained-network accuracy matches unpruned
+MADDNESS exactly (paper Fig. 9, "pruned" vs "Kn2col" accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.maddness import HashTree
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PruningPlan:
+    """Static gather plan connecting producer layer *i* → consumer *i+1*.
+
+    Attributes:
+      keep_idx: (I'·C',) int32 — absolute output dims of layer *i* to keep, in
+        *cluster order*: position ``l * C' + c`` is the dim read at level
+        ``l`` of consumer codebook ``c``.  Duplicates are allowed (a tree may
+        probe the same dim at two levels) and are transmitted twice, exactly
+        like the paper's ``I × C`` element packages.
+      consumer_codebooks: C' (static aux).
+      consumer_depth: I' (static aux).
+    """
+
+    keep_idx: Array
+    consumer_codebooks: int
+    consumer_depth: int
+
+    @property
+    def num_kept(self) -> int:
+        return self.consumer_codebooks * self.consumer_depth
+
+    def tree_flatten(self):
+        return (self.keep_idx,), (self.consumer_codebooks, self.consumer_depth)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+def plan_from_consumer_tree(consumer_tree: HashTree, consumer_in_dim: int) -> PruningPlan:
+    """Build the pruning plan for a producer feeding ``consumer_tree``.
+
+    ``consumer_in_dim`` is the consumer's full input width D' (the producer's
+    unpruned output width); codebook ``c`` of the consumer covers dims
+    ``[c·d_sub', (c+1)·d_sub')``.
+    """
+    split_dims = np.asarray(consumer_tree.split_dims)  # (C', I')
+    c_books, depth = split_dims.shape
+    if consumer_in_dim % c_books:
+        raise ValueError(f"D'={consumer_in_dim} not divisible by C'={c_books}")
+    d_sub = consumer_in_dim // c_books
+    base = np.arange(c_books, dtype=np.int64) * d_sub  # (C',)
+    abs_dims = split_dims.T + base[None, :]  # (I', C') cluster order
+    return PruningPlan(
+        keep_idx=jnp.asarray(abs_dims.reshape(-1), jnp.int32),
+        consumer_codebooks=c_books,
+        consumer_depth=depth,
+    )
+
+
+def prune_lut(lut: Array, lut_offset: Array, plan: PruningPlan):
+    """Parameter pruning: keep only the LUT columns the consumer reads."""
+    return lut[..., plan.keep_idx], lut_offset[..., plan.keep_idx]
+
+
+def prune_activations(x: Array, plan: PruningPlan) -> Array:
+    """Data pruning + reshape on a *full-width* activation: (B, D) → (B, I'·C')."""
+    return jnp.take(x, plan.keep_idx, axis=-1)
+
+
+def pruned_to_split_values(x_pruned: Array, plan: PruningPlan) -> Array:
+    """Decode the cluster-ordered package into encode's (B, C', I') input.
+
+    Because the reshape already placed level-``l`` values of codebook ``c`` at
+    position ``l·C' + c``, this is a pure reshape+transpose — *no gather* —
+    which is exactly why the paper's Allocator can stream clusters.
+    """
+    b = x_pruned.shape[0]
+    x = x_pruned.reshape(b, plan.consumer_depth, plan.consumer_codebooks)
+    return jnp.transpose(x, (0, 2, 1))
+
+
+def pruned_param_bytes(num_codebooks: int, depth: int, out_features: int,
+                       plan: Optional[PruningPlan], itemsize: int = 4) -> int:
+    """LUT footprint in bytes (the paper's FPGA-LUT resource proxy).
+
+    Unpruned: C·G·D_out entries; pruned: C·G·(I'·C').
+    """
+    g = 2**depth
+    cols = plan.num_kept if plan is not None else out_features
+    return num_codebooks * g * cols * itemsize
+
+
+def workload_ops(num_codebooks: int, depth: int, out_cols: int) -> int:
+    """Online op count of one LUT-MU call per input row (paper Fig. 9 'MOPs').
+
+    encode: I comparisons per codebook; aggregate: C-1 adds per output col.
+    """
+    encode_ops = num_codebooks * depth
+    agg_ops = (num_codebooks - 1) * out_cols
+    return encode_ops + agg_ops

@@ -1,0 +1,100 @@
+"""Differentiable LUT-MU for layer-wise retraining (Stella Nera / Halutmatmul
+style, paper Section VI-B).
+
+MADDNESS's decision-tree encode is non-differentiable; Tang et al. observed
+the resulting accuracy collapse when many layers are replaced.  The fix used
+by the paper (via [25]) is a straight-through estimator:
+
+  * forward  — the exact LUT-MU path (encode → aggregate);
+  * backward — gradients flow (a) to the LUT entries through the one-hot
+    selection (exact: the aggregation *is* linear in the LUT), and (b) to the
+    input through the dense surrogate ``x @ W`` (straight-through).
+
+This lets a host network fine-tune LUT entries jointly with surrounding
+layers while keeping inference bit-exact with the deployed unit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maddness as M
+
+Array = jax.Array
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def ste_lut_matmul(x: Array, lut: Array, surrogate_w: Array,
+                   split_dims: Array, thresholds: Array) -> Array:
+    """Approximate ``x @ W`` with trainable ``lut``; STE back to ``x``.
+
+    Args:
+      x: (B, D) float32.
+      lut: (C, G, N) float32 — *trainable*.
+      surrogate_w: (D, N) float32 — dense surrogate for the input gradient
+        (typically the original weight; non-trainable is fine).
+      split_dims / thresholds: frozen tree parameters.
+    """
+    tree = M.HashTree(split_dims, thresholds)
+    xs = M.gather_split_values(x, tree)
+    onehot = M.encode_onehot(xs, tree)
+    return M.aggregate_onehot(onehot, lut, jnp.ones((), x.dtype),
+                              jnp.zeros((lut.shape[-1],), x.dtype))
+
+
+def _fwd(x, lut, surrogate_w, split_dims, thresholds):
+    tree = M.HashTree(split_dims, thresholds)
+    xs = M.gather_split_values(x, tree)
+    onehot = M.encode_onehot(xs, tree)
+    out = M.aggregate_onehot(onehot, lut, jnp.ones((), x.dtype),
+                             jnp.zeros((lut.shape[-1],), x.dtype))
+    return out, (onehot, surrogate_w)
+
+
+def _bwd(res, g):
+    onehot, surrogate_w = res
+    b, c_books, n_proto = onehot.shape
+    n = g.shape[-1]
+    # exact gradient wrt LUT: d out[b,n] / d lut[c,p,n] = onehot[b,c,p]
+    d_lut = jnp.einsum("bcp,bn->cpn", onehot, g)
+    # straight-through gradient wrt x via the dense surrogate
+    d_x = g @ surrogate_w.T
+    return (d_x, d_lut, jnp.zeros_like(surrogate_w), None, None)
+
+
+ste_lut_matmul.defvjp(_fwd, _bwd)
+
+
+def retrain_lut_layerwise(
+    x_calib: Array,
+    target: Array,
+    lut: Array,
+    surrogate_w: Array,
+    split_dims: Array,
+    thresholds: Array,
+    steps: int = 100,
+    lr: float = 1e-2,
+) -> Tuple[Array, Array]:
+    """Minimise ``||ste_lut_matmul(x) - target||²`` over the LUT entries.
+
+    The layer-wise retraining inner loop (paper: 25-epoch layer-wise retrain
+    before the 300-epoch fine-tune).  Returns (lut, loss_history).
+    """
+
+    def loss_fn(lut_):
+        y = ste_lut_matmul(x_calib, lut_, surrogate_w, split_dims, thresholds)
+        return jnp.mean((y - target) ** 2)
+
+    @jax.jit
+    def step(lut_):
+        l, gr = jax.value_and_grad(loss_fn)(lut_)
+        return lut_ - lr * gr, l
+
+    losses = []
+    for _ in range(steps):
+        lut, l = step(lut)
+        losses.append(l)
+    return lut, jnp.stack(losses)

@@ -1,0 +1,6 @@
+from repro.data.pipeline import (  # noqa: F401
+    TokenStream,
+    synthetic_cifar,
+    synthetic_mnist,
+    token_batch_specs,
+)

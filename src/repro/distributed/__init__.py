@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    MeshAxes,
+    batch_spec,
+    cache_shardings,
+    make_constrainer,
+    param_shardings,
+)

@@ -1,0 +1,293 @@
+"""Sharding rules: FSDP × TP (× pod) for every architecture.
+
+Policy (MaxText-style, adapted per family — see DESIGN.md §5):
+
+  * ``model`` axis = tensor parallelism over feature dims (flat head dims so
+    non-divisible head *counts* — qwen's 40 heads on 16 — still shard);
+  * ``data`` (+ ``pod``) axes = data parallel for activations and ZeRO/FSDP
+    for params + optimizer state;
+  * MoE experts: expert-parallel over ``model`` when E divides it, else
+    TP-inside-expert (mixtral's 8e on a 16-way axis);
+  * every rule is divisibility-guarded: a dim that doesn't divide falls back
+    to replication on that axis rather than failing to lower (whisper's
+    odd 51865 vocab, jamba's 9-group stacks, …).
+
+Rules match on the *trailing* dims of each leaf, so stacked-layer leading
+axes (L, …) or (n_groups, …) are handled uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical roles of the mesh axes."""
+
+    dp: Tuple[str, ...]  # data-parallel (+pod) axes: ("pod","data") or ("data",)
+    tp: str = "model"
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        dp = tuple(n for n in names if n in ("pod", "data"))
+        return cls(dp=dp, tp="model" if "model" in names else names[-1])
+
+    def dp_size(self, mesh: Mesh) -> int:
+        return int(np.prod([mesh.shape[a] for a in self.dp]))
+
+    def tp_size(self, mesh: Mesh) -> int:
+        return int(mesh.shape[self.tp])
+
+
+# rule: (path regex, trailing-dim axis roles); roles: "fsdp" | "tp" | None
+_Rule = Tuple[str, Tuple[Optional[str], ...]]
+
+
+def _rules(cfg: ModelConfig, ep: bool) -> Sequence[_Rule]:
+    moe_up = ("tp", "fsdp", None) if ep else (None, "fsdp", "tp")
+    moe_down = ("tp", None, "fsdp") if ep else (None, "tp", "fsdp")
+    return [
+        (r"embed$", ("tp", "fsdp")),
+        (r"lm_head$", ("fsdp", "tp")),
+        (r"pos_embed$", (None, "fsdp")),
+        # attention (flat head dims)
+        (r"attn/w[qkv]$", ("fsdp", "tp")),
+        (r"attn/wo$", ("tp", "fsdp")),
+        (r"attn/b[qkv]$", ("tp",)),
+        (r"cross/w[qkv]$", ("fsdp", "tp")),
+        (r"cross/wo$", ("tp", "fsdp")),
+        # dense MLP
+        (r"mlp/w_(gate|up)$", ("fsdp", "tp")),
+        (r"mlp/w_down$", ("tp", "fsdp")),
+        # MoE
+        (r"moe/router$", (None, None)),
+        (r"moe/w_(gate|up)$", moe_up),
+        (r"moe/w_down$", moe_down),
+        # Mamba
+        (r"mamba/in_proj$", ("fsdp", "tp")),
+        (r"mamba/out_proj$", ("tp", "fsdp")),
+        (r"mamba/conv_w$", (None, "tp")),
+        (r"mamba/conv_b$", ("tp",)),
+        # LUT-MU (AMM) tables: codebook axis is the contraction dim → TP it
+        # like an input-parallel weight.  (§Perf-C1 refuted: FSDP-sharding
+        # the output columns converts resident LUT bytes into per-decode-step
+        # weight all-gathers — collective term 0.007→0.045 s — so serving
+        # tables stay TP-only.)
+        (r"amm_mlp/lut_(gate|up|down)$", ("tp", None, None)),
+        (r"amm_mlp/.*(scale|offset)$", (None,)),
+        (r"amm_mlp/.*(split_dims|thresholds)$", ("tp", None)),
+        # norms & everything small: replicate
+        (r".*", ()),
+    ]
+
+
+def _leaf_path(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _guarded_spec(shape: Tuple[int, ...], roles: Tuple[Optional[str], ...],
+                  mesh: Mesh, axes: MeshAxes) -> P:
+    """Build a PartitionSpec over the trailing dims with divisibility guards."""
+    n_lead = len(shape) - len(roles)
+    if n_lead < 0:  # rule longer than leaf rank: replicate
+        return P()
+    entries: list = [None] * n_lead
+    for dim, role in zip(shape[n_lead:], roles):
+        if role == "tp":
+            entries.append(axes.tp if dim % axes.tp_size(mesh) == 0 else None)
+        elif role == "fsdp":
+            fs = axes.dp_size(mesh)
+            if fs > 0 and dim % fs == 0:
+                entries.append(axes.dp if len(axes.dp) > 1 else axes.dp[0])
+            else:
+                entries.append(None)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def use_expert_parallel(cfg: ModelConfig, mesh: Mesh, axes: MeshAxes) -> bool:
+    return cfg.is_moe and cfg.num_experts % axes.tp_size(mesh) == 0
+
+
+def param_shardings(params_shape, cfg: ModelConfig, mesh: Mesh):
+    """Map a params shape-pytree → NamedSharding pytree by rule matching."""
+    axes = MeshAxes.for_mesh(mesh)
+    ep = use_expert_parallel(cfg, mesh, axes)
+    rules = _rules(cfg, ep)
+
+    def assign(path, leaf):
+        pstr = _leaf_path(path)
+        for pattern, roles in rules:
+            if re.search(pattern, pstr):
+                spec = _guarded_spec(tuple(leaf.shape), roles, mesh, axes)
+                return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Input batch dim over all dp axes (divisibility-guarded)."""
+    axes = MeshAxes.for_mesh(mesh)
+    if batch % axes.dp_size(mesh) == 0:
+        return P(axes.dp if len(axes.dp) > 1 else axes.dp[0])
+    return P()
+
+
+def cache_shardings(cache_shape, cfg: ModelConfig, mesh: Mesh, batch: int):
+    """KV/SSM cache sharding.
+
+    Default: batch over dp, kv-heads over tp when divisible.  Long-context
+    decode (batch smaller than the dp degree) switches to **sequence
+    sharding** over dp — the sharded-KV log-sum-exp attention pattern.
+    """
+    axes = MeshAxes.for_mesh(mesh)
+    dp_ax = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+    seq_shard = batch % axes.dp_size(mesh) != 0
+
+    def assign(path, leaf):
+        pstr = _leaf_path(path)
+        shape = tuple(leaf.shape)
+        if re.search(r"(^|/)(k|v|cross_k|cross_v)$", pstr) and len(shape) == 5:
+            l, b, s, nkv, hd = shape
+            dp_n, tp_n = axes.dp_size(mesh), axes.tp_size(mesh)
+            kv_tp = nkv % tp_n == 0
+            if not seq_shard:
+                # batch over dp; heads over tp when they divide, else the
+                # cache *sequence* over tp (flash-decode partial-softmax
+                # pattern — GSPMD inserts the LSE-combine collectives).
+                ent = [None, dp_ax if b % dp_n == 0 else None,
+                       None if kv_tp else (axes.tp if s % tp_n == 0 else None),
+                       axes.tp if kv_tp else None, None]
+            else:
+                # long-context batch=1: sequence over dp (and over tp too
+                # when heads don't divide) — fully seq-sharded KV.
+                if kv_tp:
+                    ent = [None, None,
+                           dp_ax if s % dp_n == 0 else None, axes.tp, None]
+                else:
+                    both = axes.dp + (axes.tp,)
+                    ok = s % (dp_n * tp_n) == 0
+                    ent = [None, None,
+                           both if ok else (dp_ax if s % dp_n == 0 else None),
+                           None, None]
+            return NamedSharding(mesh, P(*ent))
+        if re.search(r"mamba/ssm$", pstr) and len(shape) >= 4:
+            # (L, B, nh, N, P): heads over tp, batch over dp when divisible
+            ent = [None] * len(shape)
+            if shape[1] % axes.dp_size(mesh) == 0:
+                ent[1] = dp_ax
+            if shape[2] % axes.tp_size(mesh) == 0:
+                ent[2] = axes.tp
+            return NamedSharding(mesh, P(*ent))
+        if re.search(r"mamba/conv$", pstr) and len(shape) >= 3:
+            ent = [None] * len(shape)
+            if shape[1] % axes.dp_size(mesh) == 0:
+                ent[1] = dp_ax
+            if shape[-1] % axes.tp_size(mesh) == 0:
+                ent[-1] = axes.tp
+            return NamedSharding(mesh, P(*ent))
+        if re.search(r"(^|/)enc$", pstr) and len(shape) == 3:
+            ent = [dp_ax if shape[0] % axes.dp_size(mesh) == 0 else None]
+            return NamedSharding(mesh, P(*ent))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+def make_constrainer(cfg: ModelConfig, mesh: Mesh):
+    """The ``constrain(x, kind)`` hook installed into model forward calls."""
+    axes = MeshAxes.for_mesh(mesh)
+    ep = use_expert_parallel(cfg, mesh, axes)
+    dp_ax = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+    dp_size = axes.dp_size(mesh)
+    tp_size = axes.tp_size(mesh)
+
+    def constrain(x: Array, kind: str) -> Array:
+        shape = x.shape
+        if kind == "activation" and x.ndim == 3:
+            # Sequence parallelism at block boundaries: residual-stream
+            # activations shard (batch → dp, seq → tp).  Cuts the per-layer
+            # saved-activation footprint 16× under remat; XLA inserts the
+            # all-gather / reduce-scatter pair around attention/MLP.
+            # Config-gated: small-d_model archs skip it (§Perf-A3).
+            sp_ok = cfg.seq_parallel and shape[1] % tp_size == 0 and shape[1] > 1
+            spec = P(dp_ax if shape[0] % dp_size == 0 else None,
+                     axes.tp if sp_ok else None,
+                     None)
+        elif kind == "activation" and x.ndim >= 2:
+            ent = [dp_ax if shape[0] % dp_size == 0 else None]
+            spec = P(*ent)
+        elif kind == "attn_q" and x.ndim == 5:
+            # grouped query tensor (B, S, n_kv, g, hd): shard kv heads over
+            # tp when divisible, else fall back to query-sequence sharding
+            # (ring-attention-style partitioned Q) so per-device attention
+            # logits stay bounded even for small-head-count archs.
+            b_, s_, nkv_, _, _ = shape
+            if nkv_ % tp_size == 0:
+                spec = P(dp_ax if b_ % dp_size == 0 else None, None,
+                         axes.tp, None, None)
+            elif s_ % tp_size == 0 and s_ > 1:
+                spec = P(dp_ax if b_ % dp_size == 0 else None, axes.tp,
+                         None, None, None)
+            else:
+                spec = P(dp_ax if b_ % dp_size == 0 else None)
+        elif kind == "logits" and x.ndim == 3:
+            # vocab-sharded when divisible; odd vocabs (whisper's 51865)
+            # fall back to sequence sharding so the (B,S,V) f32 tensor never
+            # sits replicated on one device.
+            if shape[2] % tp_size == 0:
+                spec = P(dp_ax if shape[0] % dp_size == 0 else None, None,
+                         axes.tp)
+            elif shape[1] % tp_size == 0 and shape[1] > 1:
+                spec = P(dp_ax if shape[0] % dp_size == 0 else None,
+                         axes.tp, None)
+            else:
+                spec = P(dp_ax if shape[0] % dp_size == 0 else None)
+        elif kind == "mamba_x" and x.ndim == 6:
+            # (B, nc, Q, G, hb, P): shard heads-per-group over tp
+            spec = P(dp_ax if shape[0] % dp_size == 0 else None, None, None,
+                     None, axes.tp if shape[4] % tp_size == 0 else None, None)
+        elif kind == "mamba_l" and x.ndim == 6:
+            # (B, nc, G, hb, Q, Q): the per-head decay matrix — the largest
+            # SSD tensor; heads over tp
+            spec = P(dp_ax if shape[0] % dp_size == 0 else None, None, None,
+                     axes.tp if shape[3] % tp_size == 0 else None, None, None)
+        elif kind == "moe_bins" and x.ndim == 4:
+            spec = P(dp_ax if shape[0] % dp_size == 0 else None,
+                     axes.tp if (ep and shape[1] % tp_size == 0) else None,
+                     None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    # expose mesh metadata so modules that need explicit collectives
+    # (shard_map expert parallelism) can find the axes — see moe_apply.
+    constrain.mesh = mesh
+    constrain.axes = axes
+    constrain.ep = ep
+    return constrain

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: fused LUT-MU (encode + aggregate in one pass).
+
+The flagship kernel — the TPU analogue of the paper's allocator→encoder→
+aggregator pipeline with no stage stalls.  Per grid step it
+
+  1. runs the parallel-comparator encode for a (B_t, C_t) tile of split
+     values (VPU, no loop-carried dependency), producing the one-hot
+     indicator *in registers/VMEM* — integer codes never materialise;
+  2. contracts the one-hot ``(B_t, C_t·G)`` with the LUT tile
+     ``(C_t·G, N_t)`` on the MXU, accumulating over the C grid axis.
+
+Grid = (B/B_t, N/N_t, C/C_t) with C innermost so the output tile accumulates
+in place.  The encode is recomputed for each N-tile: it is VPU-cheap
+(≈ C·G comparisons) relative to the MXU contraction, and recompute buys us
+never spilling the one-hot to HBM — the same compute-for-bandwidth trade the
+paper makes with its comparator arrays.
+
+VMEM per step (defaults, f32): x (256·8·4·4 B = 32 KiB) + thr (8·15·4 B) +
+lut tile (8·16·256·4 B = 128 KiB) + out (256·256·4 B = 256 KiB) ≈ 0.4 MiB —
+comfortably inside the ~16 MiB/core budget, leaving room for double
+buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _fused_kernel(x_ref, thr_ref, lut_ref, out_ref, *, depth: int, acc_dtype):
+    kc = pl.program_id(2)
+
+    @pl.when(kc == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # (B_t, C_t, I)
+    thr = thr_ref[...]  # (C_t, G-1)
+    b_t, c_t, _ = x.shape
+    g = 2**depth
+
+    # ---- encoder: parallel comparators, level-by-level leaf-mask expansion
+    valid = jnp.ones((b_t, c_t, 1), dtype=jnp.bool_)
+    for level in range(depth):
+        lo = 2**level - 1
+        n_nodes = 2**level
+        cmp_l = x[:, :, level][:, :, None] >= thr[None, :, lo : lo + n_nodes]
+        left = jnp.logical_and(valid, jnp.logical_not(cmp_l))
+        right = jnp.logical_and(valid, cmp_l)
+        valid = jnp.stack([left, right], axis=-1).reshape(b_t, c_t, 2 * n_nodes)
+
+    lut = lut_ref[...]  # (C_t, G, N_t)
+    n_t = lut.shape[-1]
+    if acc_dtype == jnp.int32:
+        onehot = valid.astype(jnp.int8).reshape(b_t, c_t * g)
+    else:
+        onehot = valid.astype(lut.dtype).reshape(b_t, c_t * g)
+
+    # ---- aggregator: one-hot MXU contraction
+    out_ref[...] += jax.lax.dot_general(
+        onehot,
+        lut.reshape(c_t * g, n_t),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "block_b", "block_n", "block_c", "interpret"),
+)
+def fused_lutmu_pallas(
+    x_split: Array,
+    thresholds: Array,
+    lut: Array,
+    lut_scale: Array,
+    lut_offset: Array,
+    *,
+    depth: int,
+    block_b: int = 256,
+    block_n: int = 256,
+    block_c: int = 8,
+    interpret: bool = False,
+) -> Array:
+    """Fused LUT-MU: split values → approximate matmul output.
+
+    Args:
+      x_split: (B, C, I) gathered split-dim values (the pruned package,
+        already in cluster order, is ``reshape+transpose`` away — see
+        ``core.pruning.pruned_to_split_values``).
+      thresholds: (C, 2**I - 1) heap-ordered.
+      lut: (C, G, N) float32/bf16 or int8.
+      lut_scale / lut_offset: dequant epilogue, () or (N,).
+
+    Returns:
+      (B, N) float32.
+    """
+    b, c, i = x_split.shape
+    assert i == depth
+    g = 2**depth
+    n = lut.shape[-1]
+    int_path = lut.dtype == jnp.int8
+    acc_dtype = jnp.int32 if int_path else jnp.float32
+
+    bb = min(block_b, _ceil_to(b, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    bc = min(block_c, c)
+    bp, np_, cp = _ceil_to(b, bb), _ceil_to(n, bn), _ceil_to(c, bc)
+
+    # Padding: padded codebooks hit zero LUT rows → contribute nothing;
+    # padded batch rows are sliced off; padded N columns are sliced off.
+    x_p = jnp.pad(x_split, ((0, bp - b), (0, cp - c), (0, 0)))
+    t_p = jnp.pad(thresholds, ((0, cp - c), (0, 0)))
+    l_p = jnp.pad(lut, ((0, cp - c), (0, 0), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, depth=depth, acc_dtype=acc_dtype),
+        grid=(bp // bb, np_ // bn, cp // bc),
+        in_specs=[
+            pl.BlockSpec((bb, bc, depth), lambda ib, jn, kc: (ib, kc, 0)),
+            pl.BlockSpec((bc, g - 1), lambda ib, jn, kc: (kc, 0)),
+            pl.BlockSpec((bc, g, bn), lambda ib, jn, kc: (kc, 0, jn)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda ib, jn, kc: (ib, jn)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), acc_dtype),
+        interpret=interpret,
+    )(x_p, t_p, l_p)
+    out = out[:b, :n].astype(jnp.float32)
+    return out * lut_scale + lut_offset

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the semantic twin of one kernel, written with the most
+boring jnp possible (sequential tree walks, take_along_axis gathers) so that
+``tests/test_kernels.py`` can ``assert_allclose`` kernel outputs against it
+across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def encode_codes_ref(x_split: Array, thresholds: Array) -> Array:
+    """Sequential decision-tree walk.  (B, C, I), (C, G-1) → (B, C) int32."""
+    b, c, depth = x_split.shape
+    node = jnp.zeros((b, c), jnp.int32)
+    for level in range(depth):
+        thr = jnp.take_along_axis(
+            jnp.broadcast_to(thresholds[None], (b,) + thresholds.shape),
+            node[..., None],
+            axis=2,
+        )[..., 0]
+        bit = (x_split[:, :, level] >= thr).astype(jnp.int32)
+        node = 2 * node + 1 + bit
+    return node - (2**depth - 1)
+
+
+def encode_onehot_ref(x_split: Array, thresholds: Array,
+                      out_dtype=jnp.float32) -> Array:
+    """One-hot of the sequential walk.  (B, C, I) → (B, C, G)."""
+    depth = x_split.shape[-1]
+    codes = encode_codes_ref(x_split, thresholds)
+    return jax.nn.one_hot(codes, 2**depth, dtype=out_dtype)
+
+
+def lut_aggregate_ref(onehot: Array, lut: Array, lut_scale: Array,
+                      lut_offset: Array) -> Array:
+    """Gather-and-sum via the integer codes.  (B,C,G), (C,G,N) → (B,N) f32."""
+    codes = jnp.argmax(onehot, axis=-1)
+    gathered = jnp.take_along_axis(
+        lut[None], codes[:, :, None, None].astype(jnp.int32), axis=2
+    )[:, :, 0, :]
+    acc = gathered.astype(jnp.int32 if lut.dtype == jnp.int8 else jnp.float32)
+    out = acc.sum(axis=1).astype(jnp.float32)
+    return out * lut_scale + lut_offset
+
+
+def fused_lutmu_ref(x_split: Array, thresholds: Array, lut: Array,
+                    lut_scale: Array, lut_offset: Array) -> Array:
+    """encode → aggregate, reference composition.  → (B, N) f32."""
+    codes = encode_codes_ref(x_split, thresholds)
+    gathered = jnp.take_along_axis(
+        lut[None], codes[:, :, None, None].astype(jnp.int32), axis=2
+    )[:, :, 0, :]
+    acc = gathered.astype(jnp.int32 if lut.dtype == jnp.int8 else jnp.float32)
+    out = acc.sum(axis=1).astype(jnp.float32)
+    return out * lut_scale + lut_offset

@@ -1,0 +1,22 @@
+"""Production mesh construction (single-pod 16×16, multi-pod 2×16×16).
+
+A function — not a module-level constant — so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = n, 1
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,168 @@
+"""LUT-MU MLP: the paper's technique as a first-class serving feature.
+
+Replaces the gated-MLP projections of any transformer block with LUT-MU
+approximate matmuls, chained per the paper's pruning dataflow:
+
+    x ──encode(up-tree)──► one-hot ──┬──► lut_gate ─┐ silu·mul   (pruned
+                                     └──► lut_up   ─┘    │        packages)
+                                                         ▼
+                      package ──encode(down-tree)──► lut_down ──► full d_model
+
+Because gate and up share the *same* input, one encode serves both — the
+paper's intra-layer redundancy elimination appears here as a shared encoder.
+Gate/up LUTs are parameter-pruned to the down-encode's split dims
+(``I·C_down = d_ff/2`` columns at the default 4/8 resolution — the paper's
+headline 50 %); the down projection emits full width for the residual
+stream (the paper's "operators needing complete information" caveat).
+
+The params here are plain arrays (stackable for ``lax.scan`` over layers);
+``fit_from_dense`` produces them from calibration data via the core library.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut_mu as LM
+from repro.core import maddness as M
+from repro.core import pruning as P
+from repro.models.config import AMMConfig, ModelConfig
+
+Array = jax.Array
+
+
+def amm_mlp_param_shapes(cfg: ModelConfig, dtype=jnp.int8) -> dict:
+    """ShapeDtypeStructs for one layer's AMM-MLP params (dry-run path)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    a = cfg.amm
+    g = 2 ** a.depth
+    c_up = d // a.d_sub
+    c_down = ff // a.d_sub
+    cols = a.depth * c_down if a.prune else ff  # pruned gate/up output
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    return {
+        "up_split_dims": sds((c_up, a.depth), jnp.int32),
+        "up_thresholds": sds((c_up, g - 1), f32),
+        "lut_gate": sds((c_up, g, cols), dtype),
+        "lut_gate_scale": sds((cols,), f32),
+        "lut_gate_offset": sds((cols,), f32),
+        "lut_up": sds((c_up, g, cols), dtype),
+        "lut_up_scale": sds((cols,), f32),
+        "lut_up_offset": sds((cols,), f32),
+        "down_split_dims": sds((c_down, a.depth), jnp.int32),
+        "down_thresholds": sds((c_down, g - 1), f32),
+        "lut_down": sds((c_down, g, d), dtype),
+        "lut_down_scale": sds((d,), f32),
+        "lut_down_offset": sds((d,), f32),
+    }
+
+
+def init_amm_mlp_params(cfg: ModelConfig, key, dtype=jnp.int8) -> dict:
+    """Random-but-valid AMM params (smoke tests; real use fits offline)."""
+    shapes = amm_mlp_param_shapes(cfg, dtype)
+    ks = jax.random.split(key, len(shapes))
+    out = {}
+    for (name, sd), k in zip(shapes.items(), ks):
+        if sd.dtype == jnp.int32 and "split" in name:
+            d_sub = cfg.amm.d_sub
+            out[name] = jax.random.randint(k, sd.shape, 0, d_sub, jnp.int32)
+        elif sd.dtype == jnp.int8:
+            out[name] = jax.random.randint(k, sd.shape, -128, 128, jnp.int8)
+        elif "scale" in name:
+            out[name] = jnp.full(sd.shape, 0.01, sd.dtype)
+        else:
+            out[name] = jax.random.normal(k, sd.shape, sd.dtype) * 0.1
+    return out
+
+
+def _lut_contract(onehot: Array, lut: Array, scale: Array, offset: Array) -> Array:
+    """(T, C, G) one-hot × (C, G, N) LUT → (T, N) f32, int8- or float-path."""
+    t = onehot.shape[0]
+    n = lut.shape[-1]
+    if lut.dtype == jnp.int8:
+        oh = onehot.astype(jnp.int8).reshape(t, -1)
+        acc = jax.lax.dot_general(
+            oh, lut.reshape(-1, n), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * scale + offset
+    oh = onehot.reshape(t, -1).astype(lut.dtype)
+    return (oh @ lut.reshape(-1, n)).astype(jnp.float32) * scale + offset
+
+
+def amm_mlp_apply(params: dict, x: Array, cfg: ModelConfig) -> Array:
+    """(B, S, D) → (B, S, D) through the pruned LUT-MU MLP chain."""
+    b, s, d = x.shape
+    a = cfg.amm
+    xt = x.reshape(b * s, d)
+
+    # --- shared up/gate encode (one tree for both LUTs)
+    up_tree = M.HashTree(params["up_split_dims"], params["up_thresholds"])
+    xs = M.gather_split_values(xt.astype(jnp.float32), up_tree)
+    onehot = M.encode_onehot(xs, up_tree)
+    gate = _lut_contract(onehot, params["lut_gate"],
+                         params["lut_gate_scale"], params["lut_gate_offset"])
+    up = _lut_contract(onehot, params["lut_up"],
+                       params["lut_up_scale"], params["lut_up_offset"])
+    h = jax.nn.silu(gate) * up  # elementwise — dimension-preserving, prunable
+
+    # --- down projection
+    down_tree = M.HashTree(params["down_split_dims"], params["down_thresholds"])
+    if a.prune:
+        plan = P.PruningPlan(jnp.zeros((0,), jnp.int32),
+                             consumer_codebooks=cfg.d_ff // a.d_sub,
+                             consumer_depth=a.depth)
+        hs = P.pruned_to_split_values(h, plan)
+    else:
+        hs = M.gather_split_values(h, down_tree)
+    onehot_d = M.encode_onehot(hs, down_tree)
+    out = _lut_contract(onehot_d, params["lut_down"],
+                        params["lut_down_scale"], params["lut_down_offset"])
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def fit_from_dense(calib_x: np.ndarray, w_gate: np.ndarray, w_up: np.ndarray,
+                   w_down: np.ndarray, cfg: ModelConfig, seed: int = 0) -> dict:
+    """Offline-fit real AMM-MLP params from calibration activations."""
+    a = cfg.amm
+    d, ff = w_gate.shape
+    c_up, c_down = d // a.d_sub, ff // a.d_sub
+
+    up_tree = M.learn_hash_trees(calib_x, c_up, a.depth, seed=seed)
+    protos = M.learn_prototypes(calib_x, up_tree)
+
+    # propagate (exact) activations to fit the down tree
+    h_full = np.asarray(jax.nn.silu(calib_x @ w_gate) * (calib_x @ w_up))
+    down_tree = M.learn_hash_trees(h_full, c_down, a.depth, seed=seed + 1)
+    protos_d = M.learn_prototypes(h_full, down_tree)
+
+    plan = (P.plan_from_consumer_tree(down_tree, consumer_in_dim=ff)
+            if a.prune else None)
+
+    def build(protos_, w, tree_consumer_plan):
+        lut, scale, offset = M.build_lut(
+            protos_, jnp.asarray(w, jnp.float32), quantize_int8=a.quantize_int8)
+        if tree_consumer_plan is not None:
+            lut, offset = P.prune_lut(lut, offset, tree_consumer_plan)
+            if scale.ndim:
+                scale = scale[tree_consumer_plan.keep_idx]
+        n = lut.shape[-1]
+        scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (n,))
+        offset = jnp.broadcast_to(jnp.asarray(offset, jnp.float32), (n,))
+        return lut, scale, offset
+
+    lut_g, sg, og = build(protos, w_gate, plan)
+    lut_u, su, ou = build(protos, w_up, plan)
+    lut_d, sd_, od = build(protos_d, w_down, None)
+    return {
+        "up_split_dims": up_tree.split_dims,
+        "up_thresholds": up_tree.thresholds,
+        "lut_gate": lut_g, "lut_gate_scale": sg, "lut_gate_offset": og,
+        "lut_up": lut_u, "lut_up_scale": su, "lut_up_offset": ou,
+        "down_split_dims": down_tree.split_dims,
+        "down_thresholds": down_tree.thresholds,
+        "lut_down": lut_d, "lut_down_scale": sd_, "lut_down_offset": od,
+    }

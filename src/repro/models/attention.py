@@ -1,0 +1,334 @@
+"""GQA attention: training (chunked/flash), prefill, and decode-with-cache.
+
+Design notes:
+  * weights are stored **flat** ``(D, H·hd)`` so tensor-parallel sharding
+    constraints apply to divisible feature dims even when the head count
+    does not divide the mesh axis (e.g. qwen2.5's 40 heads on a 16-way
+    model axis);
+  * training/prefill attention is **blockwise** (flash-style running
+    log-sum-exp over KV chunks) so the (S, S) logits tensor never
+    materialises — required for the 32k-prefill dry-run cells to fit;
+  * decode consumes a KV cache of shape (B, S_max, n_kv, hd) and supports
+    sliding-window masking (gemma3/mixtral local layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+# §Perf-C3: static dequant scale for the int8 KV cache.  In production this
+# is calibrated offline per (layer, head) like the LUT quantisation scales;
+# a single constant keeps the dry-run program shape identical.
+KV_INT8_SCALE = 0.05
+
+
+def init_attn_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, nq * hd, dtype),
+        "wk": L.dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": L.dense_init(ks[3], nq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(params: dict, x: Array, cfg: ModelConfig,
+                 positions: Array) -> Tuple[Array, Array, Array]:
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, nq, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped(q: Array, nkv: int) -> Array:
+    """(B, S, Hq, hd) → (B, S, n_kv, group, hd)."""
+    b, s, nq, hd = q.shape
+    return q.reshape(b, s, nkv, nq // nkv, hd)
+
+
+def _direct_attention(q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """Materialised-logits attention for short sequences.
+
+    q: (B, S, n_kv, g, hd); k/v: (B, T, n_kv, hd); mask: (S, T) additive.
+    """
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bsngh,btnh->bngst", q, k).astype(jnp.float32) * scale
+    logits = logits + mask[None, None, None]
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", w, v)
+    return out
+
+
+# When True, _chunked_attention unrolls its KV-chunk loop.  The lowered
+# production module keeps lax.scan (correct buffer reuse in
+# memory_analysis); analysis/scan_cost.py flips this on while measuring
+# block bodies so cost_analysis sees every chunk (it counts while bodies
+# once regardless of trip count).
+UNROLL_CHUNKS = False
+
+
+class unroll_chunks:
+    """Context manager: python-unroll the attention chunk loop."""
+
+    def __enter__(self):
+        global UNROLL_CHUNKS
+        self._prev = UNROLL_CHUNKS
+        UNROLL_CHUNKS = True
+
+    def __exit__(self, *a):
+        global UNROLL_CHUNKS
+        UNROLL_CHUNKS = self._prev
+
+
+def _chunked_attention(q: Array, k: Array, v: Array, window,
+                       causal: bool, chunk: int = 1024) -> Array:
+    """Flash-style blockwise attention (running LSE), pure JAX.
+
+    Iterates KV chunks carrying per-(q-position) running max / sum /
+    weighted values.  Memory is O(S·chunk) instead of O(S²).  ``window`` may
+    be None, a python int, or a traced scalar (uniform-scan layer stacks pass
+    a per-layer window array).
+    """
+    b, s, nkv, g, hd = q.shape
+    t = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    n_chunks = (t + chunk - 1) // chunk
+    t_pad = n_chunks * chunk
+    k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.arange(s)
+    qf = q.astype(jnp.float32)
+
+    def step(carry, kb, vb, c_idx):
+        m, l, acc = carry
+        kv_pos = c_idx * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bsngh,btnh->bngst", qf,
+                            kb.astype(jnp.float32)) * scale
+        valid = kv_pos[None, :] < t
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            valid = valid & (kv_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bngst,btnh->bngsh", p, vb.astype(jnp.float32))
+        return m_new, l, acc
+
+    carry = (jnp.full((b, nkv, g, s), NEG_INF, jnp.float32),
+             jnp.zeros((b, nkv, g, s), jnp.float32),
+             jnp.zeros((b, nkv, g, s, hd), jnp.float32))
+    if UNROLL_CHUNKS:
+        for c_idx in range(n_chunks):
+            carry = step(carry, kc[c_idx], vc[c_idx], c_idx)
+        m, l, acc = carry
+    else:
+        def body(c, inp):
+            kb, vb, ci = inp
+            return step(c, kb, vb, ci), None
+        (m, l, acc), _ = jax.lax.scan(
+            body, carry, (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,S,nkv,g,hd)
+
+
+def attention(
+    params: dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    causal: bool = True,
+    window: Optional[Array] = None,  # scalar array or None
+    chunked_threshold: int = 4096,
+    constrain=lambda x, kind: x,
+) -> Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    qg = constrain(_grouped(q, nkv), "attn_q")
+
+    if s >= chunked_threshold:
+        out = _chunked_attention(qg, k, v, window, causal)
+    else:
+        pos = jnp.arange(s)
+        mask = jnp.zeros((s, s), jnp.float32)
+        if causal:
+            mask = jnp.where(pos[None, :] <= pos[:, None], 0.0, NEG_INF)
+        if window is not None:
+            mask = jnp.where(pos[None, :] > pos[:, None] - window, mask, NEG_INF)
+        out = _direct_attention(qg, k, v, mask)
+    out = out.reshape(b, s, nq * hd)
+    return out.astype(x.dtype) @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill_with_cache(params: dict, x: Array, cfg: ModelConfig,
+                       positions: Array, window: Optional[Array],
+                       cache_len: int, constrain=lambda x, kind: x,
+                       ) -> Tuple[Array, Tuple[Array, Array]]:
+    """Full-sequence attention that also returns the populated KV cache."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    qg = constrain(_grouped(q, cfg.num_kv_heads), "attn_q")
+    if s >= 4096:
+        out = _chunked_attention(qg, k, v, window, True)
+    else:
+        pos = jnp.arange(s)
+        mask = jnp.where(pos[None, :] <= pos[:, None], 0.0, NEG_INF)
+        if window is not None:
+            mask = jnp.where(pos[None, :] > pos[:, None] - window, mask, NEG_INF)
+        out = _direct_attention(qg, k, v, mask)
+    out = out.reshape(b, s, -1).astype(x.dtype) @ params["wo"].astype(x.dtype)
+    pad = cache_len - s
+    k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, (k_c, v_c)
+
+
+def decode_step(params: dict, x: Array, cfg: ModelConfig,
+                cache_k: Array, cache_v: Array, pos: Array,
+                window: Optional[Array]) -> Tuple[Array, Tuple[Array, Array]]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_max, n_kv, hd); pos: scalar int32 —
+    the index of the new token (cache[0:pos] is valid history).
+    """
+    b, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cache_k.dtype == jnp.int8:  # §Perf-C3: quantise new KV on write
+        k = jnp.clip(jnp.round(k.astype(jnp.float32) / KV_INT8_SCALE),
+                     -127, 127)
+        v = jnp.clip(jnp.round(v.astype(jnp.float32) / KV_INT8_SCALE),
+                     -127, 127)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos.astype(jnp.int32), 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos.astype(jnp.int32), 0, 0))
+    qg = _grouped(q, nkv)  # (B, 1, n_kv, g, hd)
+    s_max = cache_k.shape[1]
+    kv_pos = jnp.arange(s_max)
+    valid = kv_pos <= pos
+    if window is not None:
+        valid = valid & (kv_pos > pos - window)
+    scale = 1.0 / np.sqrt(hd)
+    if cache_k.dtype == jnp.int8:
+        # §Perf-C3: int8 KV cache.  Decode is KV-bandwidth-bound, so halving
+        # cache bytes halves the dominant roofline term.  q and the softmax
+        # weights are quantised on the fly (they are tiny); the int8×int8
+        # dot accumulates in int32 on the MXU and is rescaled afterwards.
+        sq = jnp.max(jnp.abs(qg), axis=(-1,), keepdims=True) / 127.0 + 1e-9
+        q_i8 = jnp.clip(jnp.round(qg / sq), -127, 127).astype(jnp.int8)
+        logits = jax.lax.dot_general(
+            q_i8, cache_k,
+            (((4,), (3,)), ((0, 2), (0, 2))),  # contract hd; batch b, n_kv
+            preferred_element_type=jnp.int32)
+        # dims: (b, n_kv, 1(s), g, t) → (b, n_kv, g, s, t)
+        logits = logits.transpose(0, 1, 3, 2, 4).astype(jnp.float32)
+        logits = logits * (sq.transpose(0, 2, 3, 1, 4) * KV_INT8_SCALE * scale)
+        logits = jnp.where(valid[None, None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        w_i8 = jnp.clip(jnp.round(w * 127.0), 0, 127).astype(jnp.int8)
+        out = jax.lax.dot_general(
+            w_i8, cache_v,
+            (((4,), (1,)), ((0, 1), (0, 2))),  # contract t; batch b, n_kv
+            preferred_element_type=jnp.int32)
+        # (b, n_kv, g, s, hd) → scale back
+        out = out.astype(jnp.float32) * (KV_INT8_SCALE / 127.0)
+        out = out.transpose(0, 3, 1, 2, 4)  # (b, s, n_kv, g, hd)
+    else:
+        # accumulate in f32 via preferred_element_type — casting the
+        # (possibly multi-GiB, seq-sharded) cache itself to f32 would
+        # materialise a full f32 copy in HBM.
+        logits = jnp.einsum("bsngh,btnh->bngst", qg, cache_k,
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(valid[None, None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bngst,btnh->bsngh", w.astype(cache_v.dtype),
+                         cache_v, preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, nq * hd).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (Whisper decoder → encoder states)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attn_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, nq * hd, dtype),
+        "wk": L.dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": L.dense_init(ks[3], nq * hd, d, dtype),
+    }
+
+
+def cross_attention(params: dict, x: Array, enc: Array, cfg: ModelConfig,
+                    constrain=lambda x, kind: x) -> Array:
+    """x: (B, S, D) decoder states; enc: (B, T, D) encoder states."""
+    b, s, d = x.shape
+    t = enc.shape[1]
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, nq, hd)
+    k = (enc @ params["wk"].astype(x.dtype)).reshape(b, t, nkv, hd)
+    v = (enc @ params["wv"].astype(x.dtype)).reshape(b, t, nkv, hd)
+    qg = constrain(_grouped(q, nkv), "attn_q")
+    mask = jnp.zeros((s, t), jnp.float32)
+    out = _direct_attention(qg, k, v, mask)
+    return out.reshape(b, s, nq * hd).astype(x.dtype) @ params["wo"].astype(x.dtype)

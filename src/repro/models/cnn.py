@@ -1,0 +1,251 @@
+"""The paper's own case-study models: SFC MLP (MNIST) and ResNet-9/18/50-
+style CNNs (CIFAR), with per-layer LUT-MU substitution.
+
+These run at laptop scale (the paper's Table I / Fig. 9-13 experiments) —
+the big-model integration lives in ``models/model.py``.  Convolutions are
+lowered by Kn2col (pruning-friendly) or Im2col (original Halutmatmul
+baseline), matching Fig. 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conv as CV
+from repro.core import lut_mu as LM
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# SFC MLP (paper Table I): 784 → 256 → 256 → 256 → 10
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    sizes: Tuple[int, ...] = (784, 256, 256, 256, 10)
+
+
+def init_mlp(cfg: MLPConfig, key) -> dict:
+    ks = jax.random.split(key, len(cfg.sizes) - 1)
+    return {
+        f"w{i}": L.dense_init(ks[i], cfg.sizes[i], cfg.sizes[i + 1])
+        for i in range(len(cfg.sizes) - 1)
+    } | {
+        f"b{i}": jnp.zeros((cfg.sizes[i + 1],))
+        for i in range(len(cfg.sizes) - 1)
+    }
+
+
+def mlp_forward(params: dict, x: Array, n_layers: int) -> Array:
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_train(cfg: MLPConfig, x: np.ndarray, y: np.ndarray, *,
+              steps: int = 300, lr: float = 0.05, batch: int = 128,
+              seed: int = 0) -> dict:
+    """Plain SGD trainer for the case-study MLP."""
+    n_layers = len(cfg.sizes) - 1
+    params = init_mlp(cfg, jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def step(params, xb, yb):
+        def loss_fn(p):
+            logits = mlp_forward(p, xb, n_layers)
+            return L.softmax_cross_entropy(logits, yb)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        return jax.tree.map(lambda p, gg: p - lr * gg, params, g), loss
+
+    rng = np.random.default_rng(seed)
+    for t in range(steps):
+        idx = rng.integers(0, x.shape[0], size=batch)
+        params, loss = step(params, jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+    return params
+
+
+def mlp_accuracy(forward: Callable[[Array], Array], x: np.ndarray,
+                 y: np.ndarray) -> float:
+    pred = np.asarray(jnp.argmax(forward(jnp.asarray(x)), -1))
+    return float((pred == y).mean())
+
+
+def mlp_to_amm(params: dict, cfg: MLPConfig, calib_x: np.ndarray,
+               num_codebooks: Sequence[int], depths: Sequence[int],
+               quantize_int8: bool = False,
+               retrain_steps: int = 0) -> LM.AMMChain:
+    """Replace every matmul with a pruned LUT-MU chain (paper Fig. 10);
+    ``retrain_steps`` applies the paper's layer-wise accuracy recovery."""
+    n_layers = len(cfg.sizes) - 1
+    weights = [np.asarray(params[f"w{i}"]) for i in range(n_layers)]
+    biases = [np.asarray(params[f"b{i}"]) for i in range(n_layers)]
+    chain = LM.fit_amm_chain(
+        calib_x, weights, biases, list(num_codebooks), list(depths),
+        activations=["relu"] * (n_layers - 1), quantize_int8=quantize_int8)
+    if retrain_steps:
+        chain = LM.retrain_chain(chain, weights, biases, calib_x,
+                                 steps=retrain_steps)
+    return chain
+
+
+# ---------------------------------------------------------------------------
+# ResNet-9 (paper Fig. 9/11, Table II): CIFAR-scale
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNet9Config:
+    channels: Tuple[int, ...] = (64, 128, 256, 512)
+    num_classes: int = 10
+    quant_bits: int = 4  # the paper's INT4 base model
+
+
+def init_resnet9(cfg: ResNet9Config, key) -> dict:
+    """conv1 → block1(conv+res) → conv2 → block2(conv+res) → head."""
+    c = cfg.channels
+    ks = iter(jax.random.split(key, 16))
+
+    def conv(cin, cout):
+        k = next(ks)
+        return jax.random.normal(k, (3, 3, cin, cout)) / np.sqrt(9 * cin)
+
+    return {
+        "conv0": conv(3, c[0]),
+        "conv1": conv(c[0], c[1]),
+        "res1a": conv(c[1], c[1]),
+        "res1b": conv(c[1], c[1]),
+        "conv2": conv(c[1], c[2]),
+        "conv3": conv(c[2], c[3]),
+        "res2a": conv(c[3], c[3]),
+        "res2b": conv(c[3], c[3]),
+        "head": L.dense_init(next(ks), c[3], cfg.num_classes),
+        "head_b": jnp.zeros((cfg.num_classes,)),
+    }
+
+
+def _pool(x: Array) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+_CONV_ORDER = ["conv0", "conv1", "res1a", "res1b", "conv2", "conv3",
+               "res2a", "res2b"]
+
+
+def resnet9_forward(params: dict, x: Array,
+                    conv_fns: Optional[dict] = None) -> Array:
+    """conv_fns optionally maps layer name → callable(x, w) substituting the
+    convolution (the LUT-MU path); defaults to exact convolution."""
+    def conv(name, h):
+        w = params[name]
+        if conv_fns and name in conv_fns:
+            return conv_fns[name](h, w)
+        return CV.conv_reference(h, w)
+
+    h = jax.nn.relu(conv("conv0", x))
+    h = _pool(jax.nn.relu(conv("conv1", h)))
+    r = jax.nn.relu(conv("res1a", h))
+    r = jax.nn.relu(conv("res1b", r))
+    h = h + r
+    h = _pool(jax.nn.relu(conv("conv2", h)))
+    h = _pool(jax.nn.relu(conv("conv3", h)))
+    r = jax.nn.relu(conv("res2a", h))
+    r = jax.nn.relu(conv("res2b", r))
+    h = h + r
+    h = h.mean(axis=(1, 2))
+    return h @ params["head"] + params["head_b"]
+
+
+def resnet9_train(cfg: ResNet9Config, x: np.ndarray, y: np.ndarray, *,
+                  steps: int = 200, lr: float = 0.02, batch: int = 64,
+                  seed: int = 0) -> dict:
+    params = init_resnet9(cfg, jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def step(params, xb, yb):
+        def loss_fn(p):
+            return L.softmax_cross_entropy(resnet9_forward(p, xb), yb)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        return jax.tree.map(lambda p, gg: p - lr * gg, params, g), loss
+
+    rng = np.random.default_rng(seed)
+    for t in range(steps):
+        idx = rng.integers(0, x.shape[0], size=batch)
+        params, _ = step(params, jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+    return params
+
+
+def resnet9_amm_conv_fns(params: dict, calib_x: np.ndarray, *,
+                         mode: str = "kn2col", d_sub: int = 8, depth: int = 4,
+                         layers: Optional[Sequence[str]] = None,
+                         quantize_int8: bool = False) -> Tuple[dict, dict]:
+    """Fit LUT-MU substitutes for conv layers 2..7 (paper §VI-B: first conv
+    and final FC stay exact).
+
+    mode: "kn2col" (paper/LUT-MU) or "im2col" (original Halutmatmul,
+    d_sub = K·K).  Returns (conv_fns, fitted) where fitted[name] holds the
+    AMM params for resource accounting.
+    """
+    layers = list(layers if layers is not None else _CONV_ORDER[1:])
+    conv_fns, fitted = {}, {}
+    # propagate calibration activations through the exact network, capturing
+    # each substituted conv's input
+    h = jnp.asarray(calib_x)
+    h = jax.nn.relu(CV.conv_reference(h, params["conv0"]))
+    captured = {}
+    hh = h
+    hh = jax.nn.relu(CV.conv_reference(hh, params["conv1"])); captured["conv1"] = h
+    h1 = _pool(hh)
+    r = jax.nn.relu(CV.conv_reference(h1, params["res1a"])); captured["res1a"] = h1
+    r2 = jax.nn.relu(CV.conv_reference(r, params["res1b"])); captured["res1b"] = r
+    h2 = h1 + r2
+    hh = jax.nn.relu(CV.conv_reference(h2, params["conv2"])); captured["conv2"] = h2
+    h3 = _pool(hh)
+    hh = jax.nn.relu(CV.conv_reference(h3, params["conv3"])); captured["conv3"] = h3
+    h4 = _pool(hh)
+    r = jax.nn.relu(CV.conv_reference(h4, params["res2a"])); captured["res2a"] = h4
+    r2 = jax.nn.relu(CV.conv_reference(r, params["res2b"])); captured["res2b"] = r
+
+    for name in layers:
+        w = np.asarray(params[name])  # (3, 3, Cin, Cout)
+        k, _, cin, cout = w.shape
+        xin = np.asarray(captured[name], np.float64)
+        if mode == "im2col":
+            patches = np.asarray(CV.im2col_patches(jnp.asarray(xin), k))
+            flat = patches.reshape(-1, k * k * cin)
+            sub = flat[np.random.default_rng(0).choice(
+                flat.shape[0], size=min(2048, flat.shape[0]), replace=False)]
+            c_books = (k * k * cin) // (k * k)  # d_sub = K*K = 9
+            lin = LM.fit_amm_linear(
+                sub, w.reshape(-1, cout), None, c_books, depth=depth,
+                quantize_int8=quantize_int8)
+            conv_fns[name] = partial(
+                CV.conv_im2col, matmul=lambda a, _w, lin=lin: lin(a))
+            fitted[name] = [lin]
+        else:  # kn2col: one LUT-MU per kernel tap
+            rows = xin.reshape(-1, cin)
+            sub = rows[np.random.default_rng(0).choice(
+                rows.shape[0], size=min(2048, rows.shape[0]), replace=False)]
+            c_books = cin // d_sub
+            taps = []
+            for t in range(k * k):
+                lin = LM.fit_amm_linear(
+                    sub, w.reshape(k * k, cin, cout)[t], None, c_books,
+                    depth=depth, quantize_int8=quantize_int8, seed=t)
+                taps.append(lin)
+            conv_fns[name] = partial(
+                CV.conv_kn2col,
+                tap_matmuls=[lambda a, l=l: l(a) for l in taps])
+            fitted[name] = taps
+    return conv_fns, fitted

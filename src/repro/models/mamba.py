@@ -1,0 +1,233 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Implements the chunked SSD algorithm for training/prefill (quadratic inside
+fixed-size chunks + linear inter-chunk state recurrence) and the O(1)-state
+recurrent step for decode.  Used by ``mamba2-370m`` and the Mamba positions
+of ``jamba-1.5-large``.
+
+Shapes (per layer):
+  d_inner = expand · d_model;  nh = d_inner / headdim;  per-head dim P;
+  state N = ssm_state;  G = ssm_ngroups (B/C shared within a group).
+
+The decode state is ``(conv_state (B, K-1, conv_dim), ssm_state (B, nh, P, N))``
+— constant in sequence length, which is why the ``long_500k`` cell runs for
+SSM/hybrid archs only.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def init_mamba_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    g = cfg.ssm_ngroups
+    nh = di // cfg.ssm_headdim
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * g * n + nh  # z, x, B, C, dt
+    return {
+        "in_proj": L.dense_init(ks[0], d, in_dim, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": L.dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: Array):
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+    nh = di // cfg.ssm_headdim
+    z, x, b_mat, c_mat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, x, b_mat, c_mat, dt
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(x: Array) -> Array:
+    """Lower-triangular segment sums: out[..., i, j] = Σ_{j<t<=i} x[..., t].
+
+    (the log-decay matrix of SSD's intra-chunk attention-like term)
+    """
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def mamba_forward(params: dict, x_in: Array, cfg: ModelConfig,
+                  return_state: bool = False,
+                  constrain=lambda x, kind: x):
+    """Full-sequence SSD (train / prefill).  x_in: (B, S, D) → (B, S, D).
+
+    Group-aware einsums: B/C live in (…, G, N) group form and are contracted
+    directly — never ``repeat``ed to per-head copies (a (B,nc,Q,nh,N) f32
+    materialisation is tens of GiB at Jamba scale).  The per-head decay
+    matrix L is the one unavoidable (…, heads, Q, Q) tensor; ``constrain``
+    shards its head axis over the model axis.
+
+    With ``return_state=True`` also returns the decode cache after position
+    S: ``{"conv": (B, K-1, conv_dim) raw conv inputs, "ssm": final state}``.
+    """
+    b, s, d = x_in.shape
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+    hp = cfg.ssm_headdim
+    nh = di // hp
+    q = cfg.ssm_chunk
+    dtype = x_in.dtype
+
+    zxbcdt = x_in @ params["in_proj"].astype(dtype)
+    z, x, b_mat, c_mat, dt = _split_in_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([x, b_mat, c_mat], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"].astype(dtype),
+                                   params["conv_b"].astype(dtype)))
+    x, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(params["a_log"])  # (nh,)
+    da = dt * a  # (B, S, nh) log-decay per step
+
+    # pad S to a chunk multiple
+    nc = (s + q - 1) // q
+    pad = nc * q - s
+    hb = nh // g  # heads per group
+    def padq(t_):
+        return jnp.pad(t_, ((0, 0), (0, pad)) + ((0, 0),) * (t_.ndim - 2))
+    xh = padq(x).reshape(b, nc, q, g, hb, hp).astype(jnp.float32)
+    bm = padq(b_mat).reshape(b, nc, q, g, n).astype(jnp.float32)
+    cm = padq(c_mat).reshape(b, nc, q, g, n).astype(jnp.float32)
+    dac = padq(da).reshape(b, nc, q, g, hb)
+    dtc = padq(dt).reshape(b, nc, q, g, hb)
+    xh = constrain(xh, "mamba_x")
+
+    # ---- intra-chunk (quadratic within chunk) -----------------------------
+    # group-level C·B once; per-head decay L applied in the contraction.
+    # §Perf note: dt is folded into x (a (…,Q,…,P) tensor) instead of into
+    # the (…,Q,Q) score matrix — one fewer full pass over the largest tensor
+    # — and the score matrix is cast to bf16 for the MXU contraction
+    # (accumulation stays f32 via preferred_element_type).
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cm, bm)  # (B,nc,G,Q,Q)
+    lmat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 4, 2)))  # (B,nc,G,hb,Q,Q)
+    lmat = constrain(lmat, "mamba_l")
+    scores = (cb[:, :, :, None] * lmat).astype(jnp.bfloat16)
+    x_dt = xh * dtc[..., None]  # dt_j · x_j  (B,nc,Q,G,hb,P)
+    y_intra = jnp.einsum("bcghqk,bckghp->bcqghp", scores,
+                         x_dt.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk summary states ---------------------------------------------
+    cum = jnp.cumsum(dac, axis=2)  # (B,nc,Q,G,hb)
+    total = cum[:, :, -1:]  # (B,nc,1,G,hb)
+    decay_to_end = jnp.exp(total - cum)
+    # weight x first (elementwise), then one 2-operand contraction over q —
+    # a 3-operand einsum here can pick a (…,hb,N,P) intermediate that is
+    # orders of magnitude larger than either input.
+    w_xh = x_dt * decay_to_end[..., None]
+    states = jnp.einsum("bcqgn,bcqghp->bcghnp", bm, w_xh)  # (B,nc,G,hb,N,P)
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    chunk_decay = jnp.exp(total[:, :, 0])  # (B,nc,G,hb)
+
+    def scan_body(h, inp):
+        st, dec = inp  # (B,G,hb,N,P), (B,G,hb)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h  # emit state *before* this chunk
+
+    h0 = jnp.zeros((b, g, hb, n, hp), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scan_body, h0,
+        (states.transpose(1, 0, 2, 3, 4, 5), chunk_decay.transpose(1, 0, 2, 3)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4, 5)  # (B,nc,G,hb,N,P)
+
+    y_inter = jnp.einsum("bcqgn,bcghnp->bcqghp", cm, h_prev)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, nc * q, nh, hp)[:, :s]
+    y = y + params["d_skip"].reshape(g * hb)[None, None, :, None] * \
+        x.reshape(b, s, nh, hp).astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(dtype)
+    h_final = h_final.reshape(b, nh, n, hp)
+
+    # gated RMSNorm + out projection
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    if not return_state:
+        return out
+    # decode cache: last K-1 *raw* conv inputs + the final SSD state.
+    k_conv = cfg.ssm_conv
+    tail = xbc_raw[:, max(s - (k_conv - 1), 0):]
+    if s < k_conv - 1:  # left-pad with zeros (fresh-stream semantics)
+        tail = jnp.pad(tail, ((0, 0), (k_conv - 1 - s, 0), (0, 0)))
+    return out, {"conv": tail.astype(dtype), "ssm": h_final}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+    nh = di // cfg.ssm_headdim
+    conv_dim = di + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, n, di // nh), jnp.float32),
+    }
+
+
+def mamba_decode_step(params: dict, x_in: Array, cfg: ModelConfig,
+                      cache: dict) -> Tuple[Array, dict]:
+    """One-token recurrent step.  x_in: (B, 1, D)."""
+    b = x_in.shape[0]
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+    hp = cfg.ssm_headdim
+    nh = di // hp
+    dtype = x_in.dtype
+
+    zxbcdt = x_in[:, 0] @ params["in_proj"].astype(dtype)  # (B, ·)
+    z, x, b_mat, c_mat, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, b_mat, c_mat], axis=-1)  # (B, conv_dim)
+
+    # rolling conv state
+    conv_hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,·)
+    w = params["conv_w"].astype(dtype)
+    out = (conv_hist * w[None]).sum(axis=1) + params["conv_b"].astype(dtype)
+    xbc = jax.nn.silu(out)
+    x, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    new_conv = conv_hist[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * a)  # (B, nh) decay
+
+    xh = x.reshape(b, nh, hp).astype(jnp.float32)
+    heads_per_group = nh // g
+    bh = jnp.repeat(b_mat.reshape(b, g, n), heads_per_group, axis=1)  # (B,nh,N)
+    chh = jnp.repeat(c_mat.reshape(b, g, n), heads_per_group, axis=1)
+
+    h = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhnp", bh.astype(jnp.float32), xh, dt)
+    y = jnp.einsum("bhn,bhnp->bhp", chh.astype(jnp.float32), h)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, di).astype(dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(dtype))[:, None]
+    return out, {"conv": new_conv, "ssm": h}

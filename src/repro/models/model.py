@@ -1,0 +1,613 @@
+"""Model assembly: embeddings → layer stacks (scan) → head, plus the
+prefill / decode serving paths with KV / SSM caches.
+
+One code path covers all 10 assigned architectures:
+
+  * uniform stacks (dense / MoE / SSM / VLM-backbone) are a single
+    ``lax.scan`` over stacked per-layer params with per-layer *flag arrays*
+    (sliding-window size, 0 ⇒ global) — keeps the HLO one-block small, which
+    is what makes the 62-layer 512-device dry-runs compile quickly;
+  * Jamba's 1:7 attention:Mamba interleave with MoE-every-2 scans over
+    period-8 super-blocks whose 8 positions have their own stacked params;
+  * Whisper adds a bidirectional encoder stack and cross-attention in the
+    decoder;
+  * InternVL prepends stubbed patch embeddings to the token stream.
+
+``constrain(x, kind)`` is the sharding hook — identity on CPU, a
+``with_sharding_constraint`` closure under the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import moe as MOE
+from repro.models import amm_mlp as AMM
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Constrain = Callable[[Array, str], Array]
+_id: Constrain = lambda x, kind: x
+
+_GLOBAL_WINDOW = np.int32(2**30)  # "no window" sentinel for flag arrays
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, key, layer_idx: int, dtype,
+                serving: bool = False) -> dict:
+    """One decoder block's params.  ``layer_idx`` decides attn/mamba/moe."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros((d,), dtype)}
+    if cfg.layer_is_attn(layer_idx):
+        p["attn"] = A.init_attn_params(cfg, ks[0], dtype)
+    else:
+        p["mamba"] = MB.init_mamba_params(cfg, ks[0], dtype)
+    if cfg.family == "ssm":
+        return p  # mamba2: single mixer sub-block, no MLP
+    p["ln2"] = jnp.zeros((d,), dtype)
+    if cfg.layer_is_moe(layer_idx):
+        p["moe"] = MOE.init_moe_params(cfg, ks[1], dtype)
+    elif serving and cfg.amm.enabled and "mlp" in cfg.amm.targets:
+        p["amm_mlp"] = AMM.init_amm_mlp_params(cfg, ks[1])
+    else:
+        p["mlp"] = {
+            "w_gate": L.dense_init(ks[1], d, cfg.d_ff, dtype),
+            "w_up": L.dense_init(ks[2], d, cfg.d_ff, dtype),
+            "w_down": L.dense_init(ks[3], cfg.d_ff, d, dtype),
+        }
+    return p
+
+
+def _init_encoder_block(cfg: ModelConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": jnp.zeros((d,), dtype),
+        "attn": A.init_attn_params(cfg, ks[0], dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "mlp": {
+            "w_gate": L.dense_init(ks[1], d, cfg.d_ff, dtype),
+            "w_up": L.dense_init(ks[2], d, cfg.d_ff, dtype),
+            "w_down": L.dense_init(ks[3], cfg.d_ff, d, dtype),
+        },
+    }
+
+
+def _init_decdec_block(cfg: ModelConfig, key, idx: int, dtype) -> dict:
+    """Whisper decoder block: self-attn + cross-attn + mlp."""
+    p = _init_block(cfg, key, idx, dtype)
+    k2 = jax.random.fold_in(key, 17)
+    p["ln_cross"] = jnp.zeros((cfg.d_model,), dtype)
+    p["cross"] = A.init_cross_attn_params(cfg, k2, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32,
+                serving: bool = False) -> dict:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, d, dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+        "lm_head": L.dense_init(keys[1], d, cfg.vocab_size, dtype),
+    }
+
+    if cfg.is_hybrid:
+        period = cfg.attn_every
+        n_groups = cfg.num_layers // period
+        layer_groups = {}
+        for pos in range(period):
+            pks = jax.random.split(jax.random.fold_in(keys[2], pos), n_groups)
+            layer_groups[f"pos{pos}"] = jax.vmap(
+                lambda k: _init_block(cfg, k, pos, dtype, serving))(pks)
+        params["layers"] = layer_groups
+    elif cfg.is_encdec:
+        eks = jax.random.split(keys[2], cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_encoder_block(cfg, k, dtype))(eks),
+            "pos_embed": L.embed_init(keys[3], cfg.num_frontend_tokens, d, dtype),
+            "final_norm": jnp.zeros((d,), dtype),
+        }
+        dks = jax.random.split(keys[4], cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_decdec_block(cfg, k, 0, dtype))(dks)
+        params["pos_embed"] = L.embed_init(keys[5], cfg.max_seq_len, d, dtype)
+    else:
+        lks = jax.random.split(keys[2], cfg.num_layers)
+        # uniform structure across layers (verified by config properties)
+        params["layers"] = jax.vmap(
+            lambda k: _init_block(cfg, k, cfg.moe_offset, dtype, serving))(lks)
+    return params
+
+
+def window_flags(cfg: ModelConfig) -> Array:
+    """(L,) per-layer effective attention window (sentinel = global)."""
+    wins = []
+    for i in range(cfg.num_layers):
+        if cfg.sliding_window is not None and cfg.layer_is_local(i):
+            wins.append(cfg.sliding_window)
+        else:
+            wins.append(int(_GLOBAL_WINDOW))
+    return jnp.asarray(wins, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(cfg: ModelConfig, lp: dict, h: Array, positions: Array,
+                 window, constrain: Constrain, layer_idx: int) -> Array:
+    if "mamba" in lp:
+        h = h + MB.mamba_forward(
+            lp["mamba"], L.rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+            constrain=constrain)
+        if "ln2" not in lp:
+            return constrain(h, "activation")
+    else:
+        a_out = A.attention(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                            cfg, positions=positions, window=window,
+                            constrain=constrain)
+        h = constrain(h + a_out, "activation")
+    if "ln_cross" in lp:
+        return h  # cross-attention handled by the enc-dec wrapper
+    mlp_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
+    elif "amm_mlp" in lp:
+        out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+    else:
+        m = lp["mlp"]
+        out = L.gated_mlp(mlp_in, m["w_gate"].astype(h.dtype),
+                          m["w_up"].astype(h.dtype),
+                          m["w_down"].astype(h.dtype), cfg.act)
+    return constrain(h + out, "activation")
+
+
+def _run_uniform_stack(cfg: ModelConfig, layers: dict, h: Array,
+                       positions: Array, constrain: Constrain,
+                       remat: bool) -> Array:
+    windows = window_flags(cfg)
+
+    def body(carry, xs):
+        lp, win = xs
+        return _block_apply(cfg, lp, carry, positions, win, constrain, 0), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, (layers, windows))
+    return h
+
+
+def _run_hybrid_stack(cfg: ModelConfig, layers: dict, h: Array,
+                      positions: Array, constrain: Constrain,
+                      remat: bool) -> Array:
+    period = cfg.attn_every
+
+    def one(hh, lp, pos):
+        return _block_apply(cfg, lp, hh, positions, _GLOBAL_WINDOW,
+                            constrain, pos)
+
+    def body(carry, xs):
+        hh = carry
+        for pos in range(period):
+            # per-layer remat *inside* the super-block: without it the
+            # group's vjp holds 8 layers of SSD residuals simultaneously
+            # (hundreds of GiB at Jamba scale).
+            fn = (jax.checkpoint(one, static_argnums=(2,),
+                                 policy=jax.checkpoint_policies.nothing_saveable)
+                  if remat else one)
+            hh = fn(hh, xs[f"pos{pos}"], pos)
+        return hh, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, layers)
+    return h
+
+
+def _run_encoder(cfg: ModelConfig, enc_params: dict, frames: Array,
+                 constrain: Constrain, remat: bool) -> Array:
+    t = frames.shape[1]
+    h = frames + enc_params["pos_embed"][:t].astype(frames.dtype)
+
+    def body(carry, lp):
+        hh = carry
+        a_out = A.attention(lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                            cfg, positions=jnp.arange(t)[None], causal=False,
+                            window=None, constrain=constrain)
+        hh = hh + a_out
+        m = lp["mlp"]
+        out = L.gated_mlp(L.rms_norm(hh, lp["ln2"], cfg.norm_eps),
+                          m["w_gate"].astype(hh.dtype),
+                          m["w_up"].astype(hh.dtype),
+                          m["w_down"].astype(hh.dtype), cfg.act)
+        return constrain(hh + out, "activation"), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, enc_params["layers"])
+    return L.rms_norm(h, enc_params["final_norm"], cfg.norm_eps)
+
+
+def _run_encdec_decoder(cfg: ModelConfig, layers: dict, h: Array,
+                        enc: Array, positions: Array, constrain: Constrain,
+                        remat: bool) -> Array:
+    def body(carry, lp):
+        hh = carry
+        a_out = A.attention(lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                            cfg, positions=positions, window=None,
+                            constrain=constrain)
+        hh = hh + a_out
+        c_out = A.cross_attention(lp["cross"],
+                                  L.rms_norm(hh, lp["ln_cross"], cfg.norm_eps),
+                                  enc, cfg, constrain=constrain)
+        hh = hh + c_out
+        m = lp["mlp"]
+        out = L.gated_mlp(L.rms_norm(hh, lp["ln2"], cfg.norm_eps),
+                          m["w_gate"].astype(hh.dtype),
+                          m["w_up"].astype(hh.dtype),
+                          m["w_down"].astype(hh.dtype), cfg.act)
+        return constrain(hh + out, "activation"), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, layers)
+    return h
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig, *,
+            constrain: Constrain = _id,
+            extra_embeds: Optional[Array] = None,
+            remat: bool = True,
+            compute_dtype=jnp.bfloat16) -> Array:
+    """tokens (B, S) [+ optional frontend embeds (B, T, D)] → logits f32.
+
+    For enc-dec (Whisper) ``extra_embeds`` are the encoder's input frames;
+    for VLM they are patch embeddings prepended to the token stream.
+    """
+    cd = compute_dtype
+    b, s = tokens.shape
+    h = params["embed"].astype(cd)[tokens]
+    h = constrain(h, "activation")
+
+    if cfg.is_encdec:
+        assert extra_embeds is not None, "whisper needs frame embeddings"
+        enc = _run_encoder(cfg, params["encoder"], extra_embeds.astype(cd),
+                           constrain, remat)
+        h = h + params["pos_embed"][:s].astype(cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        h = _run_encdec_decoder(cfg, params["layers"], h, enc, positions,
+                                constrain, remat)
+    else:
+        if extra_embeds is not None:  # VLM: prepend patch embeddings
+            h = jnp.concatenate([extra_embeds.astype(cd), h], axis=1)
+        s_tot = h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s_tot), (b, s_tot))
+        if cfg.is_hybrid:
+            h = _run_hybrid_stack(cfg, params["layers"], h, positions,
+                                  constrain, remat)
+        else:
+            h = _run_uniform_stack(cfg, params["layers"], h, positions,
+                                   constrain, remat)
+        if extra_embeds is not None:
+            h = h[:, extra_embeds.shape[1]:]  # logits over text positions only
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(cd)
+    return constrain(logits.astype(jnp.float32), "logits")
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+
+    def attn_cache(n_layers):
+        return {
+            "k": jnp.zeros((n_layers, batch, max_len, nkv, hd), dtype),
+            "v": jnp.zeros((n_layers, batch, max_len, nkv, hd), dtype),
+        }
+
+    if cfg.family == "ssm":
+        mc = MB.init_mamba_cache(cfg, batch, dtype)
+        return {"mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy(),
+            mc)}
+    if cfg.is_hybrid:
+        period = cfg.attn_every
+        n_groups = cfg.num_layers // period
+        cache = {}
+        for pos in range(period):
+            if cfg.layer_is_attn(pos):
+                cache[f"pos{pos}"] = attn_cache(n_groups)
+            else:
+                mc = MB.init_mamba_cache(cfg, batch, dtype)
+                cache[f"pos{pos}"] = {"mamba": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape).copy(),
+                    mc)}
+        return cache
+    if cfg.is_encdec:
+        c = attn_cache(cfg.num_layers)
+        c["cross_k"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.num_frontend_tokens, nkv, hd), dtype)
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        c["enc"] = jnp.zeros((batch, cfg.num_frontend_tokens, cfg.d_model), dtype)
+        return c
+    return attn_cache(cfg.num_layers)
+
+
+def decode_step(params: dict, token: Array, pos: Array, cache: dict,
+                cfg: ModelConfig, *, constrain: Constrain = _id,
+                compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+    """One decode step for every architecture family.
+
+    token: (B, 1) int32; pos: scalar int32 (tokens so far).
+    Returns (logits (B, 1, V) f32, updated cache).
+    """
+    cd = compute_dtype
+    b = token.shape[0]
+    h = params["embed"].astype(cd)[token]  # (B, 1, D)
+    windows = window_flags(cfg)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            hh = carry
+            lp, mc = xs
+            out, new_mc = MB.mamba_decode_step(
+                lp["mamba"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg, mc)
+            return hh + out, new_mc
+
+        h, new_m = jax.lax.scan(body, h, (params["layers"], cache["mamba"]))
+        new_cache = {"mamba": new_m}
+
+    elif cfg.is_hybrid:
+        new_cache = {}
+        period = cfg.attn_every
+        hh = h
+        groups = params["layers"]
+
+        def body(carry, xs):
+            hh = carry
+            lps, caches = xs
+            new_caches = {}
+            for p_ in range(period):
+                lp = lps[f"pos{p_}"]
+                cc = caches[f"pos{p_}"]
+                if "mamba" in lp:
+                    out, nc = MB.mamba_decode_step(
+                        lp["mamba"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                        cfg, cc["mamba"])
+                    hh = hh + out
+                    new_caches[f"pos{p_}"] = {"mamba": nc}
+                else:
+                    out, (nk, nv) = A.decode_step(
+                        lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                        cfg, cc["k"], cc["v"], pos, None)
+                    hh = hh + out
+                    new_caches[f"pos{p_}"] = {"k": nk, "v": nv}
+                mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+                if "moe" in lp:
+                    out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
+                elif "amm_mlp" in lp:
+                    out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+                else:
+                    m = lp["mlp"]
+                    out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
+                                      m["w_up"].astype(cd),
+                                      m["w_down"].astype(cd), cfg.act)
+                hh = hh + out
+            return hh, new_caches
+
+        h, new_cache = jax.lax.scan(body, hh, (groups, cache))
+
+    elif cfg.is_encdec:
+        # learned decoder positional embedding at this position
+        pe = jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos.astype(jnp.int32), 1, axis=0)
+        h = h + pe[None].astype(cd)
+
+        def body(carry, xs):
+            hh = carry
+            lp, ck, cv, xk, xv = xs
+            out, (nk, nv) = A.decode_step(
+                lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
+                ck, cv, pos, None)
+            hh = hh + out
+            # cross-attention against the cached encoder K/V
+            qx = L.rms_norm(hh, lp["ln_cross"], cfg.norm_eps)
+            hd = cfg.resolved_head_dim
+            nq, nkv = cfg.num_heads, cfg.num_kv_heads
+            q = (qx @ lp["cross"]["wq"].astype(cd)).reshape(b, 1, nq, hd)
+            qg = A._grouped(q, nkv)
+            scale = 1.0 / np.sqrt(hd)
+            lg = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                            xk.astype(jnp.float32)) * scale
+            w = jax.nn.softmax(lg, axis=-1)
+            c_out = jnp.einsum("bngst,btnh->bsngh", w, xv.astype(jnp.float32))
+            c_out = c_out.reshape(b, 1, nq * hd).astype(cd) @ lp["cross"]["wo"].astype(cd)
+            hh = hh + c_out
+            m = lp["mlp"]
+            out = L.gated_mlp(L.rms_norm(hh, lp["ln2"], cfg.norm_eps),
+                              m["w_gate"].astype(cd), m["w_up"].astype(cd),
+                              m["w_down"].astype(cd), cfg.act)
+            return hh + out, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, k=nk, v=nv)
+
+    else:
+        def body(carry, xs):
+            hh = carry
+            lp, ck, cv, win = xs
+            out, (nk, nv) = A.decode_step(
+                lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
+                ck, cv, pos, win)
+            hh = constrain(hh + out, "activation")
+            mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
+            elif "amm_mlp" in lp:
+                out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+            else:
+                m = lp["mlp"]
+                out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
+                                  m["w_up"].astype(cd),
+                                  m["w_down"].astype(cd), cfg.act)
+            hh = constrain(hh + out, "activation")
+            return hh, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"], windows))
+        new_cache = dict(cache, k=nk, v=nv)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
+    return constrain(logits, "logits"), new_cache
+
+
+def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int, *,
+            constrain: Constrain = _id,
+            extra_embeds: Optional[Array] = None,
+            compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+    """Process a prompt, returning last-position logits + populated cache.
+
+    Only attention families keep a positional cache; SSM/hybrid prefill uses
+    the forward pass then (for simplicity and dry-run purposes) primes the
+    recurrent state with a short replay — full recurrent prefill is the
+    chunked SSD scan itself.
+    """
+    cd = compute_dtype
+    b, s = tokens.shape
+    h = params["embed"].astype(cd)[tokens]
+    h = constrain(h, "activation")
+    windows = window_flags(cfg)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    if cfg.is_encdec:
+        assert extra_embeds is not None
+        enc = _run_encoder(cfg, params["encoder"], extra_embeds.astype(cd),
+                           constrain, remat=False)
+        h = h + params["pos_embed"][:s].astype(cd)
+        nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+        def body(carry, lp):
+            hh = carry
+            out, (kc, vc) = A.prefill_with_cache(
+                lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
+                positions, None, max_len, constrain=constrain)
+            hh = hh + out
+            c_out = A.cross_attention(
+                lp["cross"], L.rms_norm(hh, lp["ln_cross"], cfg.norm_eps),
+                enc, cfg, constrain=constrain)
+            hh = hh + c_out
+            xk = (enc @ lp["cross"]["wk"].astype(cd)).reshape(b, -1, nkv, hd)
+            xv = (enc @ lp["cross"]["wv"].astype(cd)).reshape(b, -1, nkv, hd)
+            m = lp["mlp"]
+            out = L.gated_mlp(L.rms_norm(hh, lp["ln2"], cfg.norm_eps),
+                              m["w_gate"].astype(cd), m["w_up"].astype(cd),
+                              m["w_down"].astype(cd), cfg.act)
+            return hh + out, (kc, vc, xk, xv)
+
+        h, (ck, cv, xk, xv) = jax.lax.scan(body, h, params["layers"])
+        cache = {"k": ck, "v": cv, "cross_k": xk, "cross_v": xv, "enc": enc}
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            hh = carry
+            lp, = xs
+            out, st = MB.mamba_forward(
+                lp["mamba"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
+                return_state=True, constrain=constrain)
+            return constrain(hh + out, "activation"), st
+
+        h, states = jax.lax.scan(body, h, (params["layers"],))
+        cache = {"mamba": states}
+
+    elif cfg.is_hybrid:
+        period = cfg.attn_every
+
+        def body(carry, xs):
+            hh = carry
+            lps = xs
+            new_caches = {}
+            for p_ in range(period):
+                lp = lps[f"pos{p_}"]
+                if "mamba" in lp:
+                    out, st = MB.mamba_forward(
+                        lp["mamba"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                        cfg, return_state=True, constrain=constrain)
+                    hh = hh + out
+                    new_caches[f"pos{p_}"] = {"mamba": st}
+                else:
+                    out, (kc, vc) = A.prefill_with_cache(
+                        lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                        cfg, positions, None, max_len)
+                    hh = hh + out
+                    new_caches[f"pos{p_}"] = {"k": kc, "v": vc}
+                mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+                if "moe" in lp:
+                    out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
+                elif "amm_mlp" in lp:
+                    out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+                else:
+                    m = lp["mlp"]
+                    out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
+                                      m["w_up"].astype(cd),
+                                      m["w_down"].astype(cd), cfg.act)
+                hh = constrain(hh + out, "activation")
+            return hh, new_caches
+
+        h, cache = jax.lax.scan(body, h, params["layers"])
+
+    else:
+        if extra_embeds is not None:
+            h = jnp.concatenate([extra_embeds.astype(cd), h], axis=1)
+            positions = jnp.broadcast_to(
+                jnp.arange(h.shape[1]), (b, h.shape[1]))
+
+        def body(carry, xs):
+            hh = carry
+            lp, win = xs
+            out, (kc, vc) = A.prefill_with_cache(
+                lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
+                positions, win, max_len, constrain=constrain)
+            hh = constrain(hh + out, "activation")
+            mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
+            elif "amm_mlp" in lp:
+                out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+            else:
+                m = lp["mlp"]
+                out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
+                                  m["w_up"].astype(cd),
+                                  m["w_down"].astype(cd), cfg.act)
+            hh = constrain(hh + out, "activation")
+            return hh, (kc, vc)
+
+        h, (ck, cv) = jax.lax.scan(body, h, (params["layers"], windows))
+        cache = {"k": ck, "v": cv}
+
+    h = L.rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
+    return constrain(logits, "logits"), cache

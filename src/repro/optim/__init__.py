@@ -1,0 +1,12 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from repro.optim.compression import (  # noqa: F401
+    CompressionState,
+    compress_gradients,
+    compression_init,
+)

@@ -1,0 +1,94 @@
+"""AdamW with decoupled weight decay + schedules, pure-pytree JAX.
+
+Mixed precision posture: master params f32, moments f32; the model forward
+casts to bf16.  The optimizer update is elementwise so it shards trivially
+under whatever sharding the params carry (FSDP: moments inherit the param
+sharding → ZeRO-style distributed optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Pytree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AdamWState:
+    step: Array
+    mu: Pytree
+    nu: Pytree
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), p)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params))
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int
+                    ) -> Callable[[Array], Array]:
+    def lr_at(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * (step + 1.0) / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr_at
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(
+    params: Pytree,
+    grads: Pytree,
+    state: AdamWState,
+    lr: Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Pytree, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,74 @@
+"""int8 gradient compression with error feedback, for the DP all-reduce.
+
+Large-scale trick: compress gradients to int8 (per-leaf max-abs scale)
+*before* the data-parallel reduction, carry the quantisation residual in an
+error-feedback buffer so the compression error is unbiased over steps
+(1-bit-Adam / PowerSGD lineage, simplest robust member of the family).
+
+Usage inside a shard_map'd or pjit'd train step::
+
+    q, scales, comp_state = compress_gradients(grads, comp_state)
+    q = jax.lax.psum(q, 'data')                # int8→int32 sum, 4x fewer bytes
+    grads = dequantize(q, scales, n_shards)
+
+The roofline effect is a 4x (f32) / 2x (bf16) cut of the DP all-reduce
+bytes — visible in the §Perf collective term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Pytree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressionState:
+    """Error-feedback residuals, one per grad leaf."""
+
+    residual: Pytree
+
+    def tree_flatten(self):
+        return (self.residual,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def compression_init(params: Pytree) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda a: jnp.zeros_like(a, jnp.float32), params))
+
+
+def _quant_leaf(g: Array, r: Array) -> Tuple[Array, Array, Array]:
+    g = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    new_r = g - q.astype(jnp.float32) * scale
+    return q, scale, new_r
+
+
+def compress_gradients(grads: Pytree, state: CompressionState
+                       ) -> Tuple[Pytree, Pytree, CompressionState]:
+    """Returns (int8 grads, per-leaf scales, updated error-feedback state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(state.residual)
+    qs, scales, rs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = _quant_leaf(g, r)
+        qs.append(q)
+        scales.append(s)
+        rs.append(nr)
+    return (treedef.unflatten(qs), treedef.unflatten(scales),
+            CompressionState(residual=treedef.unflatten(rs)))
+
+
+def dequantize(q: Pytree, scales: Pytree) -> Pytree:
+    return jax.tree.map(lambda qq, ss: qq.astype(jnp.float32) * ss, q, scales)

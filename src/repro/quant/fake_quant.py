@@ -1,0 +1,71 @@
+"""FINN-style quantisation baseline (the paper's MVAU comparison point).
+
+Two pieces:
+  * :func:`fake_quant` — uniform symmetric fake-quantisation (QAT-style
+    straight-through) used to build the INT4 base models the paper starts
+    from;
+  * :func:`successive_threshold` — the FINN "streamlined" non-linearity:
+    scaling + batch-norm + uniform-quantised activation collapsed into a
+    monotone stack of threshold comparisons (paper Fig. 8), which is exactly
+    the op that follows the LUT-MU aggregator in our QNN blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.custom_vjp
+def fake_quant(x: Array, bits: int = 4, scale: float | Array = 1.0) -> Array:
+    """Uniform symmetric fake quant with straight-through gradients."""
+    n = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x / scale * n), -n - 1, n)
+    return q * scale / n
+
+
+def _fq_fwd(x, bits, scale):
+    return fake_quant(x, bits, scale), None
+
+
+def _fq_bwd(res, g):
+    return (g, None, None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def thresholds_from_bn(gamma: Array, beta: Array, mean: Array, var: Array,
+                       bits: int, act_scale: float = 1.0,
+                       eps: float = 1e-5) -> Array:
+    """Collapse scale+BN+quantised-ReLU into threshold levels (FINN streamline).
+
+    The quantised activation emits level k iff ``BN(x) >= k·step``; solving
+    for x gives per-channel thresholds t_k = mean + (k·step − beta)·σ/γ.
+
+    Returns (levels, channels) thresholds.
+    """
+    n_levels = 2**bits - 1
+    sigma = jnp.sqrt(var + eps)
+    ks = jnp.arange(1, n_levels + 1, dtype=jnp.float32)[:, None]
+    step = act_scale / n_levels
+    return mean[None] + (ks * step - beta[None]) * sigma[None] / jnp.maximum(
+        gamma[None], 1e-8)
+
+
+def successive_threshold(x: Array, thresholds: Array,
+                         act_scale: float = 1.0) -> Array:
+    """out = (#thresholds crossed) · step — a pure comparison stack.
+
+    x: (..., C); thresholds: (levels, C).
+    """
+    n_levels = thresholds.shape[0]
+    crossed = (x[..., None, :] >= thresholds).sum(axis=-2)
+    return crossed.astype(x.dtype) * (act_scale / n_levels)
+
+
+def quant_params_bits(shape, bits: int) -> int:
+    """Parameter footprint of a quantised weight tensor, in bits."""
+    import numpy as np
+    return int(np.prod(shape)) * bits

@@ -1,0 +1,163 @@
+"""Fault-tolerant training runtime.
+
+Production posture for thousands of nodes, exercised here at host scale:
+
+  * **checkpoint/restart** — periodic async checkpoints (atomic commit);
+    on any step failure the trainer restores the latest checkpoint and
+    replays from there (data batches are pure functions of the step index,
+    so replay is exact);
+  * **failure injection** — ``failure_hook(step)`` lets tests kill arbitrary
+    steps to exercise the recovery path;
+  * **straggler mitigation** — per-step wall-time EMA watchdog; sustained
+    outliers are logged and counted, and (elastic mode) trigger a re-mesh
+    recommendation.  On real pods the same signal feeds the coordinator
+    that evicts the slow host;
+  * **elastic re-mesh** — ``remesh(new_mesh)`` re-shards the live train
+    state onto a different mesh via host round-trip (checkpoints restore
+    under any mesh for the same reason).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.models.config import ModelConfig
+from repro.optim import cosine_schedule
+from repro.runtime.steps import TrainState, init_train_state, make_train_step
+
+Pytree = Any
+
+
+class StragglerMonitor:
+    """EMA step-time watchdog (the per-host signal a coordinator would use)."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0,
+                 patience: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.ema: Optional[float] = None
+        self.consecutive = 0
+        self.flagged_steps: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True when a sustained straggler is detected."""
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_slow = dt > self.threshold * self.ema
+        # slow steps should not poison the baseline
+        if not is_slow:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+            self.consecutive = 0
+            return False
+        self.consecutive += 1
+        self.flagged_steps.append(step)
+        return self.consecutive >= self.patience
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_retries: int = 3
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    compute_dtype: Any = jnp.bfloat16
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 batch_fn: Callable[[int], dict],
+                 mesh=None, constrain=None,
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.batch_fn = batch_fn
+        self.mesh = mesh
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.monitor = StragglerMonitor()
+        self.failure_hook = failure_hook
+        self.metrics_log: list = []
+        self.recoveries = 0
+
+        constrain_fn = constrain if constrain is not None else (lambda x, k: x)
+        step_fn = make_train_step(
+            cfg, cosine_schedule(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps),
+            constrain_fn, compute_dtype=tcfg.compute_dtype)
+        self._step = jax.jit(step_fn, donate_argnums=(0,))
+        self.state: Optional[TrainState] = None
+
+    # -- lifecycle ------------------------------------------------------------
+    def init(self, seed: int = 0) -> None:
+        self.state = init_train_state(self.cfg, jax.random.PRNGKey(seed))
+
+    def _maybe_restore(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        template = jax.eval_shape(
+            lambda: init_train_state(self.cfg, jax.random.PRNGKey(0)))
+        self.state = self.ckpt.restore(template)
+        return True
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, num_steps: int) -> dict:
+        if self.state is None and not self._maybe_restore():
+            self.init()
+        retries = 0
+        while True:
+            step = int(self.state.step)
+            if step >= num_steps:
+                break
+            try:
+                t0 = time.time()
+                if self.failure_hook is not None:
+                    self.failure_hook(step)
+                batch = {k: jnp.asarray(v) for k, v in
+                         self.batch_fn(step).items()}
+                self.state, metrics = self._step(self.state, batch)
+                loss = float(metrics["loss"])  # sync point
+                dt = time.time() - t0
+                if self.monitor.observe(step, dt):
+                    self.metrics_log.append(
+                        {"step": step, "event": "straggler", "dt": dt})
+                self.metrics_log.append({"step": step, "loss": loss, "dt": dt})
+                retries = 0
+                if (step + 1) % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(step + 1, self.state)
+            except Exception as e:  # noqa — node failure / injected fault
+                retries += 1
+                self.recoveries += 1
+                self.metrics_log.append(
+                    {"step": step, "event": "failure", "error": repr(e)})
+                if retries > self.tcfg.max_retries:
+                    raise
+                if not self._maybe_restore():
+                    self.init()  # no checkpoint yet: restart from scratch
+        self.ckpt.save(int(self.state.step), self.state, blocking=True)
+        return {
+            "final_step": int(self.state.step),
+            "losses": [m["loss"] for m in self.metrics_log if "loss" in m],
+            "recoveries": self.recoveries,
+            "stragglers": self.monitor.flagged_steps,
+        }
+
+    # -- elasticity -----------------------------------------------------------
+    def remesh(self, new_mesh, shardings_fn=None) -> None:
+        """Re-shard the live state onto a different mesh (elastic scaling)."""
+        host_state = jax.tree.map(np.asarray, self.state)
+        if shardings_fn is None:
+            self.state = jax.tree.map(jnp.asarray, host_state)
+        else:
+            sh = shardings_fn(new_mesh)
+            self.state = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), host_state, sh)
+        self.mesh = new_mesh

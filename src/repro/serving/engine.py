@@ -1,0 +1,131 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+A deliberately compact twin of a production scheduler (vLLM-style):
+
+  * fixed number of **slots** (the decode batch dimension, jit-stable);
+  * incoming requests queue up; free slots are filled by running a batched
+    prefill for the newcomers (right-padded to a shared length), then every
+    engine ``step()`` decodes one token for all active slots at once;
+  * finished requests (eos or max_tokens) free their slot;
+  * the whole KV cache lives in one (L, slots, max_len, …) buffer so decode
+    is a single jitted call per step regardless of request mix;
+  * with ``cfg.amm.enabled`` the MLPs run through the LUT-MU path — the
+    paper's unit serving real traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 max_len: int = 256, compute_dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.cd = compute_dtype
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}  # slot -> request
+        self.pos = np.zeros(slots, dtype=np.int64)  # per-slot next position
+        self.cache = MD.init_cache(cfg, slots, max_len, compute_dtype)
+        self._uid = itertools.count()
+
+        def _decode(params, token, pos_vec, cache):
+            # per-slot positions: decode each slot at its own offset.  We use
+            # the max position for the shared scalar and mask via the KV
+            # cache contents (positions beyond a slot's pos hold zeros).
+            logits, cache = MD.decode_step(
+                params, token, pos_vec, cache, cfg, compute_dtype=compute_dtype)
+            return logits, cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(3,))
+
+    # -- API -------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(uid=next(self._uid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self.queue.append(req)
+        return req
+
+    def _admit(self) -> None:
+        """Fill free slots: per-request prefill (batch=1 rows of the cache)."""
+        free = [s for s in range(self.slots) if s not in self.active]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.popleft()
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, cache1 = MD.prefill(
+                self.params, tokens, self.cfg, self.max_len,
+                compute_dtype=self.cd)
+            # splice the single-row cache into this slot
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                    full, one[:, 0].astype(full.dtype), slot, 1)
+                if one.ndim >= 2 and full.shape[1] == self.slots else full,
+                self.cache, cache1)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(nxt)
+            self.active[slot] = req
+            self.pos[slot] = len(req.prompt)
+
+    def step(self) -> List[Request]:
+        """One engine iteration: admit, batched decode, retire."""
+        self._admit()
+        if not self.active:
+            return []
+        token = np.zeros((self.slots, 1), dtype=np.int32)
+        for slot, req in self.active.items():
+            token[slot, 0] = req.generated[-1] if req.generated else 0
+        # synchronized decode position = max over active slots (cache rows
+        # of shorter slots are zero-padded; correctness is per-slot because
+        # attention masks on position <= pos)
+        pos = int(self.pos[[s for s in self.active]].max())
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(token), jnp.asarray(pos, jnp.int32),
+            self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self.pos[slot] += 1
+            if (len(req.generated) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or self.pos[slot] >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+    def run_until_drained(self, max_steps: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.queue and not self.active:
+                break
+        return done

@@ -1,0 +1,89 @@
+"""The paper's case-study path: Kn2col/Im2col convolution lowering,
+LUT-MU-substituted MLP (MNIST) and ResNet-9 (CIFAR) at reduced scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv as CV
+from repro.data import synthetic_cifar, synthetic_mnist
+from repro.models import cnn
+
+
+def test_conv_lowerings_match_reference():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 16, 24)).astype(np.float32))
+    ref = CV.conv_reference(x, w)
+    np.testing.assert_allclose(np.asarray(CV.conv_im2col(x, w)),
+                               np.asarray(ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(CV.conv_kn2col(x, w)),
+                               np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_conv_stride2():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 8, 8)).astype(np.float32))
+    # VALID padding, stride 2
+    ref = CV.conv_reference(x, w, stride=2, padding="VALID")
+    got = CV.conv_kn2col(x, w, stride=2, padding="VALID")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def mnist_mlp():
+    x, y = synthetic_mnist(2048, seed=0)
+    cfg = cnn.MLPConfig(sizes=(784, 64, 64, 10))
+    params = cnn.mlp_train(cfg, x, y, steps=200, lr=0.1)
+    return cfg, params, x, y
+
+
+def test_mlp_amm_preserves_accuracy(mnist_mlp):
+    """Paper Fig. 10: LUT-MU MLP retains most accuracy vs exact matmul."""
+    cfg, params, x, y = mnist_mlp
+    n_layers = len(cfg.sizes) - 1
+    exact_acc = cnn.mlp_accuracy(
+        lambda xb: cnn.mlp_forward(params, xb, n_layers), x[:512], y[:512])
+    assert exact_acc > 0.9  # the synthetic task is learnable
+
+    chain = cnn.mlp_to_amm(params, cfg, x[:1024], num_codebooks=(98, 16, 16),
+                           depths=(4, 4, 4))
+    amm_acc = cnn.mlp_accuracy(lambda xb: chain(xb), x[:512], y[:512])
+    assert amm_acc > exact_acc - 0.15, (exact_acc, amm_acc)
+
+
+def test_mlp_amm_resolution_tradeoff(mnist_mlp):
+    """Paper Fig. 11: higher resolution (I/d_sub) ⇒ better accuracy and
+    bigger LUTs."""
+    cfg, params, x, y = mnist_mlp
+    accs, bytes_ = {}, {}
+    for depth in (2, 4):
+        chain = cnn.mlp_to_amm(params, cfg, x[:1024],
+                               num_codebooks=(98, 16, 16),
+                               depths=(depth,) * 3)
+        accs[depth] = cnn.mlp_accuracy(lambda xb: chain(xb), x[:512], y[:512])
+        bytes_[depth] = chain.lut_bytes()
+    assert bytes_[4] > bytes_[2]
+    assert accs[4] >= accs[2] - 0.02  # more prototypes never much worse
+
+
+def test_resnet9_amm_kn2col_runs_and_shrinks():
+    """Paper Fig. 9: kn2col-pruned LUT-MU ResNet shrinks params; forward
+    stays finite and correlated with the exact model."""
+    x, y = synthetic_cifar(256, seed=0)
+    cfg = cnn.ResNet9Config(channels=(8, 16, 16, 32))
+    params = cnn.resnet9_train(cfg, x, y, steps=30, batch=32)
+    logits_exact = cnn.resnet9_forward(params, jnp.asarray(x[:32]))
+
+    conv_fns, fitted = cnn.resnet9_amm_conv_fns(
+        params, x[:64], mode="kn2col", d_sub=8,
+        layers=["res1a", "res1b"])
+    logits_amm = cnn.resnet9_forward(params, jnp.asarray(x[:32]),
+                                     conv_fns=conv_fns)
+    assert bool(jnp.all(jnp.isfinite(logits_amm)))
+    # partial substitution keeps predictions mostly aligned
+    agree = float(
+        (jnp.argmax(logits_amm, -1) == jnp.argmax(logits_exact, -1)).mean())
+    assert agree > 0.5, agree

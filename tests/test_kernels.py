@@ -1,0 +1,116 @@
+"""Per-kernel allclose vs the pure-jnp oracles, across shape/dtype sweeps
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import maddness as M
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (B, D, N, C, I)
+    (64, 32, 24, 4, 4),
+    (100, 64, 129, 8, 3),
+    (7, 48, 16, 6, 4),
+    (256, 128, 256, 16, 4),
+    (1, 16, 8, 2, 2),
+]
+
+
+def _fit(B, D, N, C, I, int8=False, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(512, D)).astype(np.float32)
+    w = rng.normal(size=(D, N)).astype(np.float32)
+    p = M.fit_maddness(x, w, C, depth=I, quantize_int8=int8,
+                       optimize_prototypes=False)
+    xt = jnp.asarray(rng.normal(size=(B, D)).astype(np.float32))
+    return p, xt
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_encode_kernel_matches_ref(shape):
+    B, D, N, C, I = shape
+    p, xt = _fit(*shape)
+    xs = M.gather_split_values(xt, p.tree)
+    got = ops.encode_onehot(xs, p.tree, interpret=True)
+    want = ref.encode_onehot_ref(xs, p.tree.thresholds)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("int8", [False, True])
+def test_fused_kernel_matches_ref(shape, int8):
+    B, D, N, C, I = shape
+    p, xt = _fit(*shape, int8=int8)
+    xs = M.gather_split_values(xt, p.tree)
+    got = ops.fused_lutmu(xs, p, interpret=True)
+    want = ref.fused_lutmu_ref(xs, p.tree.thresholds, p.lut, p.lut_scale,
+                               p.lut_offset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aggregate_kernel_dtypes(shape, dtype):
+    B, D, N, C, I = shape
+    p, xt = _fit(*shape)
+    xs = M.gather_split_values(xt, p.tree)
+    onehot = ref.encode_onehot_ref(xs, p.tree.thresholds, out_dtype=dtype)
+    lut = p.lut.astype(dtype)
+    got = ops.lut_aggregate(onehot, lut, p.lut_scale, p.lut_offset,
+                            interpret=True)
+    want = ref.lut_aggregate_ref(onehot, lut, p.lut_scale, p.lut_offset)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(32, 64, 2), (256, 256, 8), (8, 128, 16)])
+def test_fused_kernel_block_shape_sweep(blocks):
+    """BlockSpec DSE: every tiling must give identical results."""
+    bb, bn, bc = blocks
+    p, xt = _fit(64, 128, 192, 16, 4)
+    xs = M.gather_split_values(xt, p.tree)
+    want = ref.fused_lutmu_ref(xs, p.tree.thresholds, p.lut, p.lut_scale,
+                               p.lut_offset)
+    got = ops.fused_lutmu(xs, p, block_b=bb, block_n=bn, block_c=bc,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 33),
+    c=st.integers(1, 9),
+    n=st.integers(1, 70),
+    depth=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_property_fused_kernel(b, c, n, depth, seed):
+    """Fuzzed shapes incl. non-128-aligned everything."""
+    rng = np.random.default_rng(seed)
+    tree = M.HashTree(
+        split_dims=jnp.asarray(rng.integers(0, 8, (c, depth)), jnp.int32),
+        thresholds=jnp.asarray(rng.normal(size=(c, 2**depth - 1)),
+                               jnp.float32))
+    lut = jnp.asarray(rng.normal(size=(c, 2**depth, n)).astype(np.float32))
+    params = M.MaddnessParams(tree, jnp.zeros((c, 2**depth, 8)), lut,
+                              jnp.ones(()), jnp.zeros((n,)))
+    xs = jnp.asarray(rng.normal(size=(b, c, depth)).astype(np.float32))
+    got = ops.fused_lutmu(xs, params, interpret=True)
+    want = ref.fused_lutmu_ref(xs, tree.thresholds, lut, params.lut_scale,
+                               params.lut_offset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_consistent_with_core_library():
+    p, xt = _fit(64, 64, 48, 8, 4)
+    via_kernel = ops.amm_matmul(xt, p, interpret=True)
+    via_core = M.maddness_matmul(xt, p)
+    np.testing.assert_allclose(np.asarray(via_kernel), np.asarray(via_core),
+                               rtol=1e-4, atol=1e-4)

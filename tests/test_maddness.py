@@ -1,0 +1,141 @@
+"""Unit tests for the MADDNESS core (offline training + online paths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import maddness as M
+
+
+def _mixture(rng, d, n_centers=16):
+    """A fixed cluster mixture; train/test must share it (PQ's core
+    assumption, paper §IV-B)."""
+    centers = rng.normal(size=(n_centers, d)).astype(np.float32)
+
+    def draw(n, noise=0.05):
+        idx = rng.integers(0, n_centers, size=n)
+        return centers[idx] + noise * rng.normal(size=(n, d)).astype(np.float32)
+
+    return draw
+
+
+def _structured(rng, n, d, n_centers=16, noise=0.05):
+    return _mixture(rng, d, n_centers)(n, noise)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    rng = np.random.default_rng(0)
+    d, n_out, c, depth = 64, 32, 8, 4
+    draw = _mixture(rng, d)
+    x = draw(2048)
+    w = (rng.normal(size=(d, n_out)) / np.sqrt(d)).astype(np.float32)
+    params = M.fit_maddness(x, w, c, depth=depth)
+    xt = jnp.asarray(draw(256))
+    return params, xt, jnp.asarray(w)
+
+
+def test_onehot_encode_matches_tree_walk(fitted):
+    params, xt, _ = fitted
+    xs = M.gather_split_values(xt, params.tree)
+    codes = M.encode(xs, params.tree)
+    onehot = M.encode_onehot(xs, params.tree)
+    assert onehot.shape == codes.shape + (16,)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(onehot, -1)), np.asarray(codes))
+    # exactly one leaf fires
+    np.testing.assert_array_equal(np.asarray(onehot.sum(-1)), 1.0)
+
+
+def test_aggregate_paths_agree(fitted):
+    params, xt, _ = fitted
+    a = M.maddness_matmul(xt, params)
+    b = M.maddness_matmul_onehot(xt, params)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_approximation_beats_random_prototypes(fitted):
+    params, xt, w = fitted
+    exact = xt @ w
+    err = float(jnp.linalg.norm(M.maddness_matmul(xt, params) - exact)
+                / jnp.linalg.norm(exact))
+    rng = np.random.default_rng(1)
+    protos_rand = jnp.asarray(
+        rng.normal(size=params.prototypes.shape), jnp.float32)
+    lut_r, s_r, o_r = M.build_lut(protos_rand, w)
+    p_rand = M.MaddnessParams(params.tree, protos_rand, lut_r, s_r, o_r)
+    err_rand = float(jnp.linalg.norm(M.maddness_matmul(xt, p_rand) - exact)
+                     / jnp.linalg.norm(exact))
+    assert err < 0.5 * err_rand, (err, err_rand)
+    assert err < 0.5  # structured data should be well-approximated
+
+
+def test_ridge_optimized_prototypes_improve_error():
+    rng = np.random.default_rng(2)
+    d, n_out, c = 64, 16, 8
+    draw = _mixture(rng, d, n_centers=32)
+    x = draw(2048)
+    w = (rng.normal(size=(d, n_out)) / np.sqrt(d)).astype(np.float32)
+    xt = jnp.asarray(draw(256))
+    exact = xt @ jnp.asarray(w)
+    errs = {}
+    for opt in (False, True):
+        p = M.fit_maddness(x, w, c, depth=4, optimize_prototypes=opt)
+        approx = M.maddness_matmul(xt, p)
+        errs[opt] = float(jnp.linalg.norm(approx - exact)
+                          / jnp.linalg.norm(exact))
+    assert errs[True] < errs[False]
+
+
+def test_int8_lut_close_to_float(fitted):
+    params, xt, w = fitted
+    rng = np.random.default_rng(0)
+    x = np.asarray(xt)
+    p8 = M.fit_maddness(_structured(np.random.default_rng(0), 2048, 64),
+                        np.asarray(w), 8, depth=4, quantize_int8=True)
+    a = M.maddness_matmul(xt, params)
+    b = M.maddness_matmul(xt, p8)
+    rel = float(jnp.linalg.norm(a - b) / jnp.linalg.norm(a))
+    assert p8.lut.dtype == jnp.int8
+    assert rel < 0.05, rel  # 8-bit LUT quantisation error is small
+
+
+def test_bias_folding():
+    rng = np.random.default_rng(3)
+    d, n_out, c = 32, 8, 4
+    x = _structured(rng, 1024, d)
+    w = (rng.normal(size=(d, n_out)) / np.sqrt(d)).astype(np.float32)
+    bias = rng.normal(size=(n_out,)).astype(np.float32)
+    p = M.fit_maddness(x, w, c, depth=3, bias=bias)
+    p_nb = M.fit_maddness(x, w, c, depth=3)
+    xt = jnp.asarray(_structured(rng, 64, d))
+    np.testing.assert_allclose(
+        np.asarray(M.maddness_matmul(xt, p)),
+        np.asarray(M.maddness_matmul(xt, p_nb) + bias), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    c=st.integers(1, 6),
+    depth=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_onehot_equals_walk(b, c, depth, seed):
+    """For arbitrary random trees the comparator-array encode must equal the
+    sequential walk — the paper's Encoder equivalence, fuzzed."""
+    rng = np.random.default_rng(seed)
+    tree = M.HashTree(
+        split_dims=jnp.asarray(rng.integers(0, depth, size=(c, depth)),
+                               jnp.int32),
+        thresholds=jnp.asarray(
+            rng.normal(size=(c, 2**depth - 1)).astype(np.float32)),
+    )
+    xs = jnp.asarray(rng.normal(size=(b, c, depth)).astype(np.float32))
+    codes = M.encode(xs, tree)
+    onehot = M.encode_onehot(xs, tree)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(onehot, -1)), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(onehot.sum(-1)), 1.0)

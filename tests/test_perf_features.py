@@ -1,0 +1,68 @@
+"""Tests for the §Perf hillclimb features: shard_map EP MoE (single-device
+fallback identity is covered in test_models_smoke), int8 KV cache, and the
+grad-accumulation step."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models import model as MD
+from repro.optim import cosine_schedule
+from repro.runtime.steps import init_train_state, make_train_step
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """§Perf-C3: int8 KV decode logits within quantisation tolerance."""
+    cfg = get_config("gemma3-4b", reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = MD.init_params(cfg, key)
+    B, S = 2, 12
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    _, cache_f = MD.prefill(params, tokens[:, :6], cfg, 32,
+                            compute_dtype=jnp.float32)
+    cache_q = dict(cache_f)
+    for kk in ("k", "v"):
+        cache_q[kk] = jnp.clip(
+            jnp.round(cache_f[kk].astype(jnp.float32) / A.KV_INT8_SCALE),
+            -127, 127).astype(jnp.int8)
+    cf, cq = cache_f, cache_q
+    for t in range(6, S):
+        pos = jnp.asarray(t, jnp.int32)
+        lf, cf = MD.decode_step(params, tokens[:, t:t + 1], pos, cf, cfg,
+                                compute_dtype=jnp.float32)
+        lq, cq = MD.decode_step(params, tokens[:, t:t + 1], pos, cq, cfg,
+                                compute_dtype=jnp.float32)
+        scale = float(jnp.abs(lf).max())
+        rel = float(jnp.abs(lf - lq).max()) / scale
+        assert rel < 0.06, rel  # int8 KV + int8 softmax-weight quantisation
+    assert cq["k"].dtype == jnp.int8  # new tokens written quantised
+
+
+def test_grad_accum_matches_full_batch():
+    """Accumulated microbatch gradients ≈ full-batch gradients (same data)."""
+    cfg = get_config("qwen3-14b", reduced=True)
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, d_ff=128,
+                              vocab_size=64, num_heads=2, num_kv_heads=1,
+                              head_dim=32)
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (8, 16), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (8, 16), 0, cfg.vocab_size),
+    }
+    sched = cosine_schedule(1e-3, 1, 100)
+    outs = {}
+    for accum in (1, 4):
+        c = dataclasses.replace(cfg, grad_accum=accum)
+        state = init_train_state(c, key)
+        step = make_train_step(c, sched, compute_dtype=jnp.float32)
+        new_state, metrics = jax.jit(step)(state, batch)
+        outs[accum] = (float(metrics["loss"]),
+                       jax.tree.leaves(new_state.params))
+    assert outs[1][0] == pytest.approx(outs[4][0], rel=1e-4)
+    for a, b in zip(outs[1][1], outs[4][1]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-5)

@@ -1,0 +1,120 @@
+"""Property tests for the paper's pruning optimisations.
+
+Central invariant: **pruning is lossless** — a pruned chain's outputs are
+bit-identical to the unpruned chain's (the surviving values are the same
+numbers; only dead data/parameters were removed).  This is the algebraic
+form of the paper's Fig. 9 claim (pruned accuracy == Kn2col accuracy).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lut_mu as LM
+from repro.core import maddness as M
+from repro.core import pruning as P
+
+
+def _mk_chain(seed, d_in, d_mid, d_out, c1, c2, depth, act, int8=False):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(512, d_in)).astype(np.float32)
+    w1 = (rng.normal(size=(d_in, d_mid)) / np.sqrt(d_in)).astype(np.float32)
+    w2 = (rng.normal(size=(d_mid, d_out)) / np.sqrt(d_mid)).astype(np.float32)
+    chain = LM.fit_amm_chain(
+        x, [w1, w2], [None, None], [c1, c2], [depth, depth],
+        activations=[act], quantize_int8=int8)
+    return chain, [w1, w2], x
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    depth=st.integers(2, 4),
+    act=st.sampled_from([None, "relu", "silu"]),
+)
+def test_pruned_chain_is_lossless(seed, depth, act):
+    chain, weights, _ = _mk_chain(seed, 32, 48, 16, 4, 6, depth, act)
+    unpruned = LM.unpruned_chain(chain, weights, [None, None])
+    rng = np.random.default_rng(seed + 1)
+    xt = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    out_p = chain(xt)
+    h = unpruned.layers[0](xt)
+    h = LM.AMMChain._ACTS[act](h)
+    out_u = unpruned.layers[1](h)
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_u))
+
+
+def test_pruned_chain_lossless_int8():
+    chain, weights, _ = _mk_chain(7, 32, 48, 16, 4, 6, 4, "relu", int8=True)
+    unpruned = LM.unpruned_chain(chain, weights, [None, None])
+    rng = np.random.default_rng(8)
+    xt = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    out_p = chain(xt)
+    h = jax.nn.relu(unpruned.layers[0](xt))
+    out_u = unpruned.layers[1](h)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_u),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_parameter_pruning_shrinks_lut():
+    chain, weights, _ = _mk_chain(0, 32, 48, 16, 4, 6, 4, "relu")
+    pruned_cols = chain.layers[0].params.lut.shape[-1]
+    assert pruned_cols == 6 * 4  # I' * C'
+    assert pruned_cols < weights[0].shape[1]
+    unpruned = LM.unpruned_chain(chain, weights, [None, None])
+    assert chain.lut_bytes() < unpruned.lut_bytes()
+    # paper's headline: ~50% at resolution I/d_sub = 4/8
+    ratio = (chain.layers[0].params.lut.shape[-1]
+             / unpruned.layers[0].params.lut.shape[-1])
+    assert ratio == pytest.approx(0.5, abs=0.01)
+
+
+def test_plan_cluster_ordering():
+    """Data reshape: position l*C' + c must hold split dim l of codebook c."""
+    rng = np.random.default_rng(1)
+    c2, depth, d_mid = 6, 4, 48
+    tree = M.HashTree(
+        split_dims=jnp.asarray(rng.integers(0, d_mid // c2, (c2, depth)),
+                               jnp.int32),
+        thresholds=jnp.asarray(rng.normal(size=(c2, 2**depth - 1)),
+                               jnp.float32))
+    plan = P.plan_from_consumer_tree(tree, d_mid)
+    keep = np.asarray(plan.keep_idx).reshape(depth, c2)
+    d_sub = d_mid // c2
+    for l in range(depth):
+        for c in range(c2):
+            assert keep[l, c] == c * d_sub + int(tree.split_dims[c, l])
+    # round-trip: package → split values
+    x = jnp.asarray(rng.normal(size=(8, d_mid)).astype(np.float32))
+    pkg = P.prune_activations(x, plan)
+    xs = P.pruned_to_split_values(pkg, plan)
+    ref = M.gather_split_values(x, tree)
+    np.testing.assert_array_equal(np.asarray(xs), np.asarray(ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), c2=st.sampled_from([2, 4, 8]),
+       depth=st.integers(1, 4))
+def test_property_package_roundtrip(seed, c2, depth):
+    rng = np.random.default_rng(seed)
+    d_mid = c2 * 8
+    tree = M.HashTree(
+        split_dims=jnp.asarray(rng.integers(0, 8, (c2, depth)), jnp.int32),
+        thresholds=jnp.asarray(rng.normal(size=(c2, 2**depth - 1)),
+                               jnp.float32))
+    plan = P.plan_from_consumer_tree(tree, d_mid)
+    x = jnp.asarray(rng.normal(size=(4, d_mid)).astype(np.float32))
+    xs = P.pruned_to_split_values(P.prune_activations(x, plan), plan)
+    ref = M.gather_split_values(x, tree)
+    np.testing.assert_array_equal(np.asarray(xs), np.asarray(ref))
+
+
+def test_workload_and_bytes_accounting():
+    # pruned workload/footprint grow with I'C', unpruned with D_out
+    unpruned = P.pruned_param_bytes(8, 4, 512, None)
+    tree = M.HashTree(jnp.zeros((16, 4), jnp.int32),
+                      jnp.zeros((16, 15), jnp.float32))
+    plan = P.plan_from_consumer_tree(tree, 512)
+    pruned = P.pruned_param_bytes(8, 4, 512, plan)
+    assert pruned == unpruned * (16 * 4) // 512

@@ -1,0 +1,154 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, compression,
+quant, II model."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import ii_model
+from repro.data import TokenStream, synthetic_cifar, synthetic_mnist
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compress_gradients, compression_init,
+                         cosine_schedule)
+from repro.optim.compression import dequantize
+from repro.quant import fake_quant, successive_threshold, thresholds_from_bn
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    lr = jnp.asarray(0.1)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw_update(params, grads, state, lr,
+                                     weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1e-3, 10, 100)
+    assert float(sched(jnp.asarray(0))) > 0.0
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    cn = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(cn) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_token_stream_deterministic_and_learnable():
+    ts = TokenStream(vocab_size=64, batch_size=4, seq_len=32, seed=1)
+    b1, b2 = ts.batch(7), ts.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(ts.batch(0)["labels"][:, :-1],
+                                  ts.batch(0)["tokens"][:, 1:])
+    # bigram structure: unigram distribution is non-uniform (Zipf)
+    toks = np.concatenate([ts.batch(i)["tokens"].ravel() for i in range(10)])
+    counts = np.bincount(toks, minlength=64)
+    assert counts.max() > 4 * max(counts.mean(), 1)
+
+
+def test_synthetic_datasets_shapes():
+    x, y = synthetic_mnist(128)
+    assert x.shape == (128, 784) and y.shape == (128,)
+    assert x.min() >= 0 and x.max() <= 1
+    xc, yc = synthetic_cifar(16)
+    assert xc.shape == (16, 32, 32, 3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    mgr.save(10, tree, blocking=True)
+    template = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    out = mgr.restore(template)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.latest_step() == 3
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2  # retention pruned step 1
+
+
+def test_checkpoint_async_atomic(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = {"x": jnp.arange(1000, dtype=jnp.float32)}
+    mgr.save(5, tree, blocking=False)
+    mgr.wait()
+    assert not list(tmp_path.glob("*.tmp"))
+    out = mgr.restore(jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree))
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(tree["x"]))
+
+
+def test_gradient_compression_error_feedback():
+    """Over repeated steps the error-feedback residual keeps the *average*
+    dequantised gradient unbiased (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(256,)).astype(np.float32))}
+    state = compression_init(g_true)
+    acc = jnp.zeros((256,))
+    n = 50
+    for _ in range(n):
+        q, scales, state = compress_gradients(g_true, state)
+        acc = acc + dequantize(q, scales)["w"]
+    mean_err = float(jnp.abs(acc / n - g_true["w"]).max())
+    one_q, one_s, _ = compress_gradients(g_true, compression_init(g_true))
+    one_err = float(jnp.abs(dequantize(one_q, one_s)["w"] - g_true["w"]).max())
+    assert mean_err < one_err / 5  # feedback beats one-shot quantisation
+    assert float(jnp.abs(state.residual["w"]).max()) < 1.0
+
+
+def test_fake_quant_grad_is_straight_through():
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, 4, 1.0)))(jnp.ones((3,)))
+    np.testing.assert_array_equal(np.asarray(g), 1.0)
+
+
+def test_successive_threshold_matches_bn_quant():
+    """FINN streamline: threshold stack == BN + uniform-quantised ReLU."""
+    rng = np.random.default_rng(0)
+    c, bits = 8, 3
+    gamma = jnp.asarray(rng.uniform(0.5, 2.0, c).astype(np.float32))
+    beta = jnp.asarray(rng.normal(size=c).astype(np.float32) * 0.1)
+    mean = jnp.asarray(rng.normal(size=c).astype(np.float32) * 0.1)
+    var = jnp.asarray(rng.uniform(0.5, 1.5, c).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(64, c)).astype(np.float32))
+
+    thr = thresholds_from_bn(gamma, beta, mean, var, bits)
+    got = successive_threshold(x, thr)
+
+    n_levels = 2**bits - 1
+    bn = (x - mean) / jnp.sqrt(var + 1e-5) * gamma + beta
+    want = jnp.clip(jnp.round(jnp.clip(bn, 0, 1) * n_levels), 0,
+                    n_levels) / n_levels
+    # thresholds express ">= k·step": allow off-by-rounding at boundaries
+    assert float(jnp.mean(jnp.abs(got - want) <= 1.0 / n_levels + 1e-6)) > 0.97
+
+
+def test_ii_model_tradeoffs():
+    """Fig. 7/13 analytic model: bigger partition factors raise II and cut
+    resources — the Pareto axes move in opposite directions."""
+    base = ii_model.LutMuConfig(c_in=32, depth_in=4, c_out=32, depth_out=4,
+                                s=2, e=1)
+    big = ii_model.LutMuConfig(c_in=32, depth_in=4, c_out=32, depth_out=4,
+                               s=8, e=4)
+    assert ii_model.initiation_interval(big) > ii_model.initiation_interval(base)
+    assert ii_model.resources(big)["roms"] < ii_model.resources(base)["roms"]
+    assert ii_model.power_proxy_mw(big) < ii_model.power_proxy_mw(base)
+    assert ii_model.throughput_fps(base) > ii_model.throughput_fps(big)

@@ -1,0 +1,109 @@
+"""Fault-tolerance integration tests: failure injection → checkpoint
+recovery, straggler detection, elastic re-mesh, loss-goes-down."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import TokenStream
+from repro.runtime.trainer import StragglerMonitor, Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    cfg = get_config("qwen3-14b", reduced=True)
+    return dataclasses.replace(cfg, num_layers=2, d_model=64, d_ff=128,
+                               vocab_size=128, num_heads=2, num_kv_heads=1,
+                               head_dim=32)
+
+
+def _stream(cfg):
+    ts = TokenStream(vocab_size=cfg.vocab_size, batch_size=4, seq_len=32)
+    return lambda step: ts.batch(step)
+
+
+def test_loss_decreases(tiny_cfg, tmp_path):
+    tr = Trainer(tiny_cfg, TrainerConfig(str(tmp_path), ckpt_every=50,
+                                         lr=3e-3, warmup_steps=5,
+                                         compute_dtype=jnp.float32),
+                 _stream(tiny_cfg))
+    out = tr.run(30)
+    losses = out["losses"]
+    assert out["final_step"] == 30
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+def test_failure_recovery_resumes_from_checkpoint(tiny_cfg, tmp_path):
+    crashed = {"done": False}
+
+    def failure_hook(step):
+        if step == 12 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    tr = Trainer(tiny_cfg, TrainerConfig(str(tmp_path), ckpt_every=5,
+                                         compute_dtype=jnp.float32),
+                 _stream(tiny_cfg), failure_hook=failure_hook)
+    out = tr.run(20)
+    assert out["final_step"] == 20
+    assert out["recoveries"] == 1
+    # failure at step 12 → restore from ckpt at step 10 → steps 10,11 replayed
+    events = [m for m in tr.metrics_log if m.get("event") == "failure"]
+    assert len(events) == 1 and events[0]["step"] == 12
+    steps_seen = [m["step"] for m in tr.metrics_log if "loss" in m]
+    assert steps_seen.count(10) == 2  # replay proves restore-from-10
+
+
+def test_recovery_is_deterministic(tiny_cfg, tmp_path):
+    """Replayed batches are identical (data = f(step)), so a crash+resume
+    run converges to the same state as an uninterrupted one."""
+    t1 = Trainer(tiny_cfg, TrainerConfig(str(tmp_path / "a"), ckpt_every=4,
+                                         compute_dtype=jnp.float32),
+                 _stream(tiny_cfg))
+    out1 = t1.run(12)
+
+    crashed = {"done": False}
+
+    def hook(step):
+        if step == 7 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("boom")
+
+    t2 = Trainer(tiny_cfg, TrainerConfig(str(tmp_path / "b"), ckpt_every=4,
+                                         compute_dtype=jnp.float32),
+                 _stream(tiny_cfg), failure_hook=hook)
+    out2 = t2.run(12)
+    p1 = jax.tree.leaves(t1.state.params)
+    p2 = jax.tree.leaves(t2.state.params)
+    for a, b in zip(p1, p2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0, patience=2)
+    assert not mon.observe(0, 1.0)
+    for s in range(1, 5):
+        assert not mon.observe(s, 1.0)
+    assert not mon.observe(5, 5.0)   # first outlier: flagged, not sustained
+    assert mon.observe(6, 5.0)       # sustained → mitigation signal
+    assert mon.flagged_steps == [5, 6]
+    # EMA not poisoned by outliers
+    assert mon.ema < 1.5
+
+
+def test_elastic_remesh_roundtrip(tiny_cfg, tmp_path):
+    tr = Trainer(tiny_cfg, TrainerConfig(str(tmp_path),
+                                         compute_dtype=jnp.float32),
+                 _stream(tiny_cfg))
+    tr.run(3)
+    before = [np.asarray(x) for x in jax.tree.leaves(tr.state.params)]
+    tr.remesh(None)  # host round-trip (single-device stand-in for re-mesh)
+    after = [np.asarray(x) for x in jax.tree.leaves(tr.state.params)]
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+    tr.run(5)  # training continues after re-mesh
+    assert int(tr.state.step) == 5
