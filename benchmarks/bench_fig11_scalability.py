@@ -1,14 +1,23 @@
 """Paper Fig. 11: pruned vs unpruned LUT-MU resource growth as resolution
-(I/d_sub) rises.  Resource proxy = LUT bytes (FPGA-LUT stand-in)."""
+(I/d_sub) rises.  Resource proxy = LUT bytes (FPGA-LUT stand-in).
+
+Extended with a wall-clock backend sweep through the unified execution
+engine (``kernels.dispatch.lutmu_matmul``): every (d_sub, I) point times the
+ref / unfused / fused backends on the same inputs and reports which one
+``backend="auto"`` would pick — so the dispatch heuristics are measured,
+not guessed.  On CPU the Pallas backends run in interpret mode (correctness
+cost model only); run on TPU for real numbers.
+"""
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, random_lutmu_params, sweep_backends
 from repro.core.maddness import HashTree
 from repro.core.pruning import plan_from_consumer_tree, pruned_param_bytes
+from repro.kernels.dispatch import select_backend
 
 
-def run() -> None:
+def run(batch: int = 256, timed: bool = True) -> None:
     d_in = d_out = 256
     for d_sub in (8, 16):
         for depth in (3, 4, 5):
@@ -22,6 +31,15 @@ def run() -> None:
             emit(f"fig11/{d_sub}x{2**depth}", 0.0,
                  f"resolution={depth / d_sub:.3f};unpruned_bytes={unpruned};"
                  f"pruned_bytes={pruned};saving={unpruned / pruned:.2f}x")
+
+            if not timed:
+                continue
+            xs, params = random_lutmu_params(batch, c, d_out, depth)
+            times = sweep_backends(xs, params)
+            auto = select_backend(batch, c, d_out, depth, params.lut.dtype)
+            for be, us in times.items():
+                emit(f"fig11/{d_sub}x{2**depth}/backend={be}", us,
+                     f"B={batch};C={c};N={d_out};I={depth};auto_pick={auto}")
 
 
 if __name__ == "__main__":

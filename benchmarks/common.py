@@ -1,8 +1,9 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and the LUT-MU
+backend sweep used to measure (not guess) the dispatch heuristics."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import numpy as np
@@ -24,3 +25,45 @@ def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def random_lutmu_params(b: int, c: int, n: int, depth: int, *,
+                        int8: bool = False, seed: int = 0):
+    """Synthetic ``(x_split, MaddnessParams)`` of the given shape — LUT-MU
+    kernels are data-oblivious, so random params time like fitted ones."""
+    import jax.numpy as jnp
+    from repro.core import maddness as M
+
+    g = 2**depth
+    rng = np.random.default_rng(seed)
+    tree = M.HashTree(
+        split_dims=jnp.asarray(rng.integers(0, 8, (c, depth)), jnp.int32),
+        thresholds=jnp.asarray(rng.normal(size=(c, g - 1)), jnp.float32))
+    if int8:
+        lut = jnp.asarray(rng.integers(-128, 128, (c, g, n)), jnp.int8)
+        scale = jnp.full((n,), 0.01, jnp.float32)
+    else:
+        lut = jnp.asarray(rng.normal(size=(c, g, n)), jnp.float32)
+        scale = jnp.ones((), jnp.float32)
+    params = M.MaddnessParams(tree, jnp.zeros((c, g, 0), jnp.float32), lut,
+                              scale, jnp.zeros((n,), jnp.float32))
+    xs = jnp.asarray(rng.normal(size=(b, c, depth)), jnp.float32)
+    return xs, params
+
+
+def sweep_backends(xs, params, backends: Optional[Sequence[str]] = None,
+                   warmup: int = 1, iters: int = 3) -> Dict[str, float]:
+    """Median µs/call of ``lutmu_matmul`` per backend on one problem.
+
+    This is how the ``select_backend`` heuristics get measured: every
+    backend runs through the same unified entry point on identical inputs.
+    """
+    from repro.kernels.dispatch import BACKENDS, lutmu_matmul
+
+    out: Dict[str, float] = {}
+    for be in backends if backends is not None else BACKENDS:
+        fn = jax.jit(
+            lambda v, be=be: lutmu_matmul(v, params, backend=be,
+                                          input_kind="split"))
+        out[be] = time_us(fn, xs, warmup=warmup, iters=iters)
+    return out

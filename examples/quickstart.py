@@ -1,7 +1,7 @@
 """Quickstart: LUT-MU approximate matmul in five minutes.
 
-Fits MADDNESS offline on calibration data, runs the online path three ways
-(reference gather, one-hot MXU contraction, fused Pallas kernel), and shows
+Fits MADDNESS offline on calibration data, runs the online path through
+every backend of the unified execution engine (``lutmu_matmul``), and shows
 the paper's pruning on a two-layer chain.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core import lut_mu as LM
 from repro.core import maddness as M
-from repro.kernels import ops
+from repro.kernels import BACKENDS, lutmu_matmul, select_backend
 
 rng = np.random.default_rng(0)
 
@@ -30,14 +30,12 @@ print(f"LUT shape (C, G, N) = {params.lut.shape}")
 x = jnp.asarray(centers[rng.integers(0, 32, 128)] + 0.05 * rng.normal(
     size=(128, D)).astype(np.float32))
 exact = x @ jnp.asarray(W)
-approx_ref = M.maddness_matmul(x, params)          # sequential tree walk
-approx_mxu = M.maddness_matmul_onehot(x, params)   # one-hot contraction
-approx_krn = ops.amm_matmul(x, params)             # fused Pallas kernel
-
-for name, out in (("reference", approx_ref), ("one-hot/MXU", approx_mxu),
-                  ("pallas-fused", approx_krn)):
+for backend in BACKENDS + ("auto",):
+    out = lutmu_matmul(x, params, backend=backend)  # the one entry point
     err = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
-    print(f"{name:14s} relative error vs exact matmul: {err:.4f}")
+    print(f"backend={backend:8s} relative error vs exact matmul: {err:.4f}")
+print("auto resolves to:",
+      select_backend(x.shape[0], C, N, I, params.lut.dtype))
 
 # --- the paper's pruning: chain two LUT-MUs -------------------------------
 W2 = (rng.normal(size=(N, 16)) / np.sqrt(N)).astype(np.float32)

@@ -12,6 +12,10 @@ Composable JAX modules:
 
 Numerics contract (tested): a pruned chain's surviving values are
 bit-identical to the unpruned chain's values at the kept dims.
+
+All forward passes route through the unified execution engine
+(``repro.kernels.dispatch.lutmu_matmul``); the ``backend`` kwarg on
+``AMMLinear``/``AMMChain`` threads straight to it (default ``"auto"``).
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ import numpy as np
 
 from repro.core import maddness as M
 from repro.core import pruning as P
+from repro.kernels import dispatch as D
 
 Array = jax.Array
 
@@ -60,44 +65,15 @@ class AMMLinear:
         return self.out_plan is not None
 
     # -- forward ------------------------------------------------------------
-    def encode_full(self, x: Array) -> Array:
-        """(B, D) full-width input → (B, C, I) split values (data pruning)."""
-        return M.gather_split_values(x, self.params.tree)
-
-    def encode_package(self, x_pruned: Array, plan: P.PruningPlan) -> Array:
-        """Cluster-ordered package from the previous LUT-MU → split values."""
-        return P.pruned_to_split_values(x_pruned, plan)
-
-    def __call__(self, x: Array, *, use_onehot: bool = True) -> Array:
+    def __call__(self, x: Array, *, backend: str = "auto") -> Array:
         """Full-width input path."""
-        xs = self.encode_full(x)
-        return self._aggregate(xs, use_onehot)
+        return D.lutmu_matmul(x, self.params, backend=backend,
+                              input_kind="full")
 
-    def apply_package(self, x_pruned: Array, *, use_onehot: bool = True) -> Array:
+    def apply_package(self, x_pruned: Array, *, backend: str = "auto") -> Array:
         """Pruned-package input path (chained mode)."""
-        plan = P.PruningPlan(
-            keep_idx=jnp.zeros((0,), jnp.int32),  # unused
-            consumer_codebooks=self.num_codebooks,
-            consumer_depth=self.depth,
-        )
-        xs = self.encode_package(x_pruned, plan)
-        return self._aggregate(xs, use_onehot)
-
-    def _aggregate(self, x_split: Array, use_onehot: bool) -> Array:
-        p = self.params
-        if use_onehot:
-            onehot = M.encode_onehot(x_split, p.tree)
-            if p.lut.dtype == jnp.int8:
-                oh = onehot.astype(jnp.int8).reshape(onehot.shape[0], -1)
-                acc = jax.lax.dot_general(
-                    oh, p.lut.reshape(-1, p.lut.shape[-1]),
-                    (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.int32,
-                )
-                return acc.astype(jnp.float32) * p.lut_scale + p.lut_offset
-            return M.aggregate_onehot(onehot, p.lut, p.lut_scale, p.lut_offset)
-        codes = M.encode(x_split, p.tree)
-        return M.aggregate(codes, p.lut, p.lut_scale, p.lut_offset)
+        return D.lutmu_matmul(x_pruned, self.params, backend=backend,
+                              input_kind="package")
 
     # -- resource accounting (paper Figs. 11/12) -----------------------------
     def lut_bytes(self) -> int:
@@ -136,11 +112,11 @@ class AMMChain:
     def tree_unflatten(cls, aux, children):
         return cls(list(children[0]), aux[0])
 
-    def __call__(self, x: Array, *, use_onehot: bool = True) -> Array:
-        h = self.layers[0](x, use_onehot=use_onehot)
+    def __call__(self, x: Array, *, backend: str = "auto") -> Array:
+        h = self.layers[0](x, backend=backend)
         for i, layer in enumerate(self.layers[1:]):
             h = self._ACTS[self.activation_names[i]](h)
-            h = layer.apply_package(h, use_onehot=use_onehot)
+            h = layer.apply_package(h, backend=backend)
         return h
 
     def lut_bytes(self) -> int:

@@ -464,17 +464,24 @@ def maddness_matmul(x: Array, params: MaddnessParams) -> Array:
     return aggregate(codes, params.lut, params.lut_scale, params.lut_offset)
 
 
+def contract_onehot(onehot: Array, lut: Array, lut_scale: Array,
+                    lut_offset: Array) -> Array:
+    """dtype-dispatching one-hot contraction: int8 LUTs accumulate in int32
+    (integer one-hot), float LUTs go through :func:`aggregate_onehot`."""
+    if lut.dtype == jnp.int8:
+        oh = onehot.astype(jnp.int8).reshape(onehot.shape[0], -1)
+        acc = jax.lax.dot_general(
+            oh, lut.reshape(-1, lut.shape[-1]),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        return acc.astype(jnp.float32) * lut_scale + lut_offset
+    return aggregate_onehot(onehot, lut, lut_scale, lut_offset)
+
+
 def maddness_matmul_onehot(x: Array, params: MaddnessParams) -> Array:
     """One-hot (MXU) online path — numerically identical to the reference."""
     xs = gather_split_values(x, params.tree)
     onehot = encode_onehot(xs, params.tree)
-    if params.lut.dtype == jnp.int8:
-        # int8 path: contract in int32 by using integer one-hot
-        oh = onehot.astype(jnp.int8).reshape(onehot.shape[0], -1)
-        acc = jax.lax.dot_general(
-            oh, params.lut.reshape(-1, params.lut.shape[-1]),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        return acc.astype(jnp.float32) * params.lut_scale + params.lut_offset
-    return aggregate_onehot(onehot, params.lut, params.lut_scale, params.lut_offset)
+    return contract_onehot(onehot, params.lut, params.lut_scale,
+                           params.lut_offset)

@@ -1,3 +1,19 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""LUT-MU kernels layer.
+
+``dispatch.lutmu_matmul`` is the one entry point the rest of the repo uses;
+``ops`` keeps thin per-kernel wrappers (tests, benchmarks), ``ref`` the
+pure-jnp oracles, and ``autotune`` the fused-kernel tile selection.
+"""
+
+from repro.kernels.autotune import (  # noqa: F401
+    AutotuneCache,
+    TileConfig,
+    fused_vmem_bytes,
+    heuristic_tiles,
+)
+from repro.kernels.dispatch import (  # noqa: F401
+    BACKENDS,
+    lutmu_matmul,
+    params_from_arrays,
+    select_backend,
+)

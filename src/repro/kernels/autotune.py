@@ -1,0 +1,320 @@
+"""Tile-size autotuning for the fused LUT-MU Pallas kernel.
+
+The fused kernel's grid is ``(B/B_t, N/N_t, C/C_t)`` and its per-step VMEM
+footprint (see ``docs/kernels.md`` for the full table) is
+
+    x    tile  B_t · C_t · I · 4        bytes (f32 split values)
+    thr  tile  C_t · (G-1) · 4          bytes
+    lut  tile  C_t · G · N_t · itemsize bytes
+    out  tile  B_t · N_t · 4            bytes (f32/i32 accumulator)
+
+Every candidate tiling must fit inside ``VMEM_FRACTION`` of the ~16 MiB/core
+budget so the pipeline can double-buffer.  Two selection modes:
+
+  * **heuristic** (default, free): the candidate that minimises grid steps —
+    i.e. the largest tiles that fit — with ties broken toward fewer N-tiles
+    (each N-tile re-runs the VPU encode) and then smaller VMEM;
+  * **measured** (``autotune=True`` on the dispatch entry point, or
+    ``REPRO_AUTOTUNE=1``): run each candidate on synthetic data of the real
+    shape and keep the fastest.
+
+Measured winners persist in a JSON cache keyed by
+``(platform, backend, B, C, N, I, lut_dtype)`` so a shape is tuned once per
+machine.  Cache path: ``$REPRO_AUTOTUNE_CACHE`` or
+``~/.cache/repro/lutmu_autotune.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # per-core VMEM (TPU v4/v5 class)
+VMEM_FRACTION = 0.5  # headroom for double buffering
+
+_BLOCK_B_CHOICES = (64, 128, 256, 512)
+_BLOCK_N_CHOICES = (128, 256, 512)
+_BLOCK_C_CHOICES = (4, 8, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Fused-kernel tiling ``(B_t, N_t, C_t)``."""
+
+    block_b: int = 256
+    block_n: int = 256
+    block_c: int = 8
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TileConfig":
+        return cls(int(d["block_b"]), int(d["block_n"]), int(d["block_c"]))
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _ceil_div(x: int, m: int) -> int:
+    return (x + m - 1) // m
+
+
+def fused_vmem_bytes(tiles: TileConfig, depth: int, lut_itemsize: int) -> int:
+    """Per-grid-step VMEM footprint of the fused kernel (docstring formula).
+
+    Besides the x/thr/lut/out blocks the kernel materialises intermediates
+    in VMEM: the ``(B_t, C_t·G)`` one-hot it contracts (int8 on the int8
+    path, else the LUT dtype) and the level-by-level bool leaf-mask pyramid
+    (Σ_l B_t·C_t·2^l ≈ 2·B_t·C_t·G bools).  Negligible at the default
+    I = 4, dominant for deep trees — so they are counted here.
+    """
+    g = 2**depth
+    x = tiles.block_b * tiles.block_c * depth * 4
+    thr = tiles.block_c * (g - 1) * 4
+    lut = tiles.block_c * g * tiles.block_n * lut_itemsize
+    out = tiles.block_b * tiles.block_n * 4
+    onehot_itemsize = 1 if lut_itemsize == 1 else lut_itemsize
+    interm = tiles.block_b * tiles.block_c * g * (onehot_itemsize + 2)
+    return x + thr + lut + out + interm
+
+
+def _effective(tiles: TileConfig, b: int, c: int, n: int) -> TileConfig:
+    """Clamp a tiling to the (padded) problem, mirroring the kernel wrapper."""
+    return TileConfig(
+        block_b=min(tiles.block_b, _ceil_to(b, 8)),
+        block_n=min(tiles.block_n, _ceil_to(n, 128)),
+        block_c=min(tiles.block_c, c),
+    )
+
+
+def candidate_tiles(
+    b: int,
+    c: int,
+    n: int,
+    depth: int,
+    lut_itemsize: int = 4,
+    budget_bytes: Optional[int] = None,
+) -> List[TileConfig]:
+    """All distinct in-budget tilings for this problem, largest-tile first."""
+    budget = int((budget_bytes or VMEM_BUDGET_BYTES) * VMEM_FRACTION)
+    seen: Dict[TileConfig, TileConfig] = {}
+    for bb in _BLOCK_B_CHOICES:
+        for bn in _BLOCK_N_CHOICES:
+            for bc in _BLOCK_C_CHOICES:
+                t = _effective(TileConfig(bb, bn, bc), b, c, n)
+                if fused_vmem_bytes(t, depth, lut_itemsize) <= budget:
+                    seen.setdefault(t, t)
+    out = list(seen)
+    out.sort(key=lambda t: _grid_score(t, b, c, n, depth, lut_itemsize))
+    if not out:  # degenerate budget: fall back to the smallest tiling
+        out = [_effective(TileConfig(64, 128, 4), b, c, n)]
+    return out
+
+
+def _grid_score(t: TileConfig, b: int, c: int, n: int, depth: int,
+                lut_itemsize: int) -> Tuple:
+    """Lexicographic heuristic rank: fewer grid steps, then fewer N-tiles
+    (each re-runs the encode), then the smaller VMEM footprint."""
+    steps = (
+        _ceil_div(b, t.block_b) * _ceil_div(n, t.block_n) * _ceil_div(c, t.block_c)
+    )
+    return (steps, _ceil_div(n, t.block_n),
+            fused_vmem_bytes(t, depth, lut_itemsize))
+
+
+def heuristic_tiles(
+    b: int,
+    c: int,
+    n: int,
+    depth: int,
+    lut_itemsize: int = 4,
+    budget_bytes: Optional[int] = None,
+) -> TileConfig:
+    """Best in-budget tiling without measuring anything."""
+    return candidate_tiles(b, c, n, depth, lut_itemsize, budget_bytes)[0]
+
+
+# ---------------------------------------------------------------------------
+# Persistent per-shape cache.
+# ---------------------------------------------------------------------------
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "lutmu_autotune.json"
+
+
+def shape_key(platform: str, backend: str, b: int, c: int, n: int,
+              depth: int, lut_dtype) -> str:
+    return f"{platform}|{backend}|b{b}|c{c}|n{n}|i{depth}|{jnp.dtype(lut_dtype).name}"
+
+
+class AutotuneCache:
+    """JSON-backed map ``shape key → TileConfig`` (plus timing metadata)."""
+
+    def __init__(self, path: Optional[Path] = None):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self._entries: Dict[str, dict] = {}
+        self.load()
+
+    def load(self) -> None:
+        try:
+            self._entries = json.loads(self.path.read_text())
+            if not isinstance(self._entries, dict):
+                self._entries = {}
+        except (OSError, ValueError):
+            self._entries = {}
+
+    def save(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(self._entries, indent=1, sort_keys=True))
+        os.replace(tmp, self.path)
+
+    def get(self, key: str) -> Optional[TileConfig]:
+        e = self._entries.get(key)
+        if not e:
+            return None
+        try:
+            return TileConfig.from_dict(e)
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put(self, key: str, tiles: TileConfig, us: Optional[float] = None,
+            source: str = "measured") -> None:
+        entry = tiles.to_dict() | {"source": source}
+        if us is not None:
+            entry["us"] = round(float(us), 2)
+        self._entries[key] = entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+_default_cache: Optional[AutotuneCache] = None
+
+
+def get_default_cache() -> AutotuneCache:
+    global _default_cache
+    if _default_cache is None or _default_cache.path != default_cache_path():
+        _default_cache = AutotuneCache()
+    return _default_cache
+
+
+# ---------------------------------------------------------------------------
+# Measurement.
+# ---------------------------------------------------------------------------
+
+
+def _time_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def measure_fused_tiles(
+    b: int,
+    c: int,
+    n: int,
+    depth: int,
+    lut_dtype=jnp.float32,
+    *,
+    interpret: bool = True,
+    candidates: Optional[Sequence[TileConfig]] = None,
+    iters: int = 3,
+) -> Tuple[TileConfig, Dict[TileConfig, float]]:
+    """Time every candidate tiling on synthetic data of the real shape.
+
+    Synthetic inputs (fixed seed) are fine because the kernel is data-
+    oblivious: comparisons and the one-hot contraction run the same work for
+    any values.  Returns ``(best, {tiles: µs})``.
+    """
+    from repro.kernels.fused_lutmu import fused_lutmu_pallas
+
+    lut_itemsize = jnp.dtype(lut_dtype).itemsize
+    if candidates is None:
+        candidates = candidate_tiles(b, c, n, depth, lut_itemsize)
+    g = 2**depth
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, c, depth)).astype(np.float32))
+    thr = jnp.asarray(rng.normal(size=(c, g - 1)).astype(np.float32))
+    if jnp.dtype(lut_dtype) == jnp.int8:
+        lut = jnp.asarray(rng.integers(-128, 128, (c, g, n)), jnp.int8)
+    else:
+        lut = jnp.asarray(rng.normal(size=(c, g, n)), lut_dtype)
+    scale = jnp.ones((), jnp.float32)
+    offset = jnp.zeros((n,), jnp.float32)
+
+    timings: Dict[TileConfig, float] = {}
+    for t in candidates:
+        us = _time_us(
+            lambda xv, tv, lv: fused_lutmu_pallas(
+                xv, tv, lv, scale, offset, depth=depth,
+                block_b=t.block_b, block_n=t.block_n, block_c=t.block_c,
+                interpret=interpret,
+            ),
+            x, thr, lut, iters=iters,
+        )
+        timings[t] = us
+    best = min(timings, key=timings.get)
+    return best, timings
+
+
+def get_tiles(
+    b: int,
+    c: int,
+    n: int,
+    depth: int,
+    lut_dtype=jnp.float32,
+    *,
+    platform: Optional[str] = None,
+    backend: str = "fused",
+    allow_measure: bool = False,
+    interpret: bool = True,
+    cache: Optional[AutotuneCache] = None,
+) -> TileConfig:
+    """Resolve the tiling for one shape: cache hit → measured → heuristic.
+
+    Measured results are written back to the persistent cache; heuristic
+    picks are free to recompute and are not persisted.  Only the fused
+    backend is measured — the candidates and timings model the fused
+    kernel's footprint, so other backends always get the heuristic (their
+    B/C tiles are shape-compatible, and ``lut_aggregate``'s K tile keeps
+    its own default).
+    """
+    platform = platform or jax.default_backend()
+    cache = cache if cache is not None else get_default_cache()
+    key = shape_key(platform, backend, b, c, n, depth, lut_dtype)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    if backend == "fused" and (
+            allow_measure or os.environ.get("REPRO_AUTOTUNE") == "1"):
+        best, timings = measure_fused_tiles(
+            b, c, n, depth, lut_dtype, interpret=interpret)
+        cache.put(key, best, us=timings[best])
+        try:
+            cache.save()
+        except OSError:
+            pass  # read-only filesystem: keep the in-memory entry
+        return best
+    return heuristic_tiles(b, c, n, depth, jnp.dtype(lut_dtype).itemsize)

@@ -1,0 +1,214 @@
+"""Unified LUT-MU execution engine: one entry point, three backends.
+
+``lutmu_matmul(x, params, backend="auto")`` is the single call site the rest
+of the repo (``core/``, ``models/``, ``launch/``) uses to run the paper's
+allocator→encoder→aggregator pipeline.  It normalises the input form, picks a
+backend per shape/dtype/platform, resolves fused-kernel tile sizes through the
+autotuner, and runs:
+
+  * ``"ref"``     — pure jnp/XLA, no Pallas: parallel-comparator one-hot
+    encode + dense contraction (``core.maddness``).  Semantically identical
+    to the ``kernels/ref.py`` oracles (parity-tested); the fastest path off
+    TPU and for sub-MXU-tile problems.
+  * ``"unfused"`` — two Pallas kernels: ``maddness_encode`` then
+    ``lut_aggregate``.  The one-hot round-trips through HBM, but the encode
+    runs exactly once — wins when many N-tiles × deep trees make the fused
+    kernel's per-N-tile encode recompute dominate.
+  * ``"fused"``   — the flagship single-pass Pallas kernel
+    (``fused_lutmu``): the one-hot never leaves VMEM.
+
+Selection rules live in :func:`select_backend` and are documented (with the
+VMEM tile-budget table) in ``docs/kernels.md``; ``REPRO_LUTMU_BACKEND``
+force-overrides ``"auto"``.  On non-TPU platforms the Pallas backends run in
+interpret mode so parity tests execute everywhere.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.maddness import (HashTree, MaddnessParams, contract_onehot,
+                                 gather_split_values)
+from repro.core.maddness import encode_onehot as _encode_onehot_xla
+from repro.core.pruning import PruningPlan, pruned_to_split_values
+from repro.kernels import autotune as AT
+from repro.kernels.fused_lutmu import fused_lutmu_pallas
+from repro.kernels.lut_aggregate import lut_aggregate_pallas
+from repro.kernels.maddness_encode import encode_onehot_pallas
+
+Array = jax.Array
+
+BACKENDS = ("ref", "unfused", "fused")
+INPUT_KINDS = ("full", "split", "package")
+
+# Below either threshold the MXU tiles are mostly padding — see docs/kernels.md.
+_MIN_MXU_ROWS = 8
+_MIN_MXU_COLS = 128
+# N-tile count past which the fused kernel's encode recompute (one VPU encode
+# per N-tile) outweighs the unfused path's one-hot HBM round-trip, for deep
+# trees (G ≥ 64) where the encode is no longer trivially cheap.
+_UNFUSED_N_TILES = 8
+_UNFUSED_MIN_G = 64
+
+
+def params_from_arrays(split_dims: Array, thresholds: Array, lut: Array,
+                       lut_scale: Array, lut_offset: Array) -> MaddnessParams:
+    """Bundle raw arrays (e.g. a serving param dict) into ``MaddnessParams``.
+
+    Prototypes are only needed offline (LUT rebuilds / STE retraining), so the
+    bundle carries an empty placeholder.
+    """
+    tree = HashTree(split_dims, thresholds)
+    protos = jnp.zeros(lut.shape[:2] + (0,), jnp.float32)
+    return MaddnessParams(tree, protos, lut, lut_scale, lut_offset)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: on for every platform except real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+def select_backend(
+    b: int,
+    c: int,
+    n: int,
+    depth: int,
+    lut_dtype=jnp.float32,
+    platform: Optional[str] = None,
+    tiles: Optional[AT.TileConfig] = None,
+) -> str:
+    """Shape/dtype/platform → backend name (the ``"auto"`` policy).
+
+    Rules (measured by ``benchmarks/bench_fig11_scalability.py``, documented
+    in ``docs/kernels.md``):
+
+      1. off-TPU → ``ref``: interpret-mode Pallas exists for correctness,
+         never for speed;
+      2. sub-tile problems (B < 8, N < 128, or C·G < 128) → ``ref``: the MXU
+         would chew mostly padding;
+      3. int8 LUTs → ``fused``: the int8 one-hot and int32 accumulator stay
+         in VMEM;
+      4. many N-tiles × deep trees → ``unfused``: encode once, spill the
+         one-hot, instead of re-encoding per N-tile;
+      5. otherwise → ``fused``.
+    """
+    platform = platform or jax.default_backend()
+    g = 2**depth
+    if platform != "tpu":
+        return "ref"
+    if b < _MIN_MXU_ROWS or n < _MIN_MXU_COLS or c * g < _MIN_MXU_COLS:
+        return "ref"
+    if jnp.dtype(lut_dtype) == jnp.int8:
+        return "fused"
+    tiles = tiles or AT.heuristic_tiles(b, c, n, depth,
+                                        jnp.dtype(lut_dtype).itemsize)
+    if math.ceil(n / tiles.block_n) >= _UNFUSED_N_TILES and g >= _UNFUSED_MIN_G:
+        return "unfused"
+    return "fused"
+
+
+def _to_split_values(x: Array, params: MaddnessParams, input_kind: str) -> Array:
+    if input_kind == "full":
+        return gather_split_values(x, params.tree)
+    if input_kind == "split":
+        return x
+    if input_kind == "package":
+        plan = PruningPlan(
+            keep_idx=jnp.zeros((0,), jnp.int32),  # already gathered upstream
+            consumer_codebooks=params.tree.num_codebooks,
+            consumer_depth=params.tree.depth,
+        )
+        return pruned_to_split_values(x, plan)
+    raise ValueError(f"input_kind must be one of {INPUT_KINDS}, got {input_kind!r}")
+
+
+def _run_ref(xs: Array, params: MaddnessParams) -> Array:
+    """Pure-XLA path: one-hot encode + dense contraction (no Pallas)."""
+    onehot = _encode_onehot_xla(xs, params.tree)
+    return contract_onehot(onehot, params.lut, params.lut_scale,
+                           params.lut_offset)
+
+
+def _run_unfused(xs: Array, params: MaddnessParams, tiles: AT.TileConfig,
+                 interpret: bool) -> Array:
+    onehot = encode_onehot_pallas(
+        xs, params.tree.thresholds, depth=params.tree.depth,
+        block_b=tiles.block_b, block_c=tiles.block_c, interpret=interpret,
+    )
+    return lut_aggregate_pallas(
+        onehot, params.lut, params.lut_scale, params.lut_offset,
+        block_b=tiles.block_b, block_n=tiles.block_n, interpret=interpret,
+    )
+
+
+def _run_fused(xs: Array, params: MaddnessParams, tiles: AT.TileConfig,
+               interpret: bool) -> Array:
+    return fused_lutmu_pallas(
+        xs, params.tree.thresholds, params.lut,
+        params.lut_scale, params.lut_offset,
+        depth=params.tree.depth, block_b=tiles.block_b,
+        block_n=tiles.block_n, block_c=tiles.block_c, interpret=interpret,
+    )
+
+
+def lutmu_matmul(
+    x: Array,
+    params: MaddnessParams,
+    *,
+    backend: str = "auto",
+    input_kind: str = "full",
+    tiles: Optional[AT.TileConfig] = None,
+    autotune: bool = False,
+    interpret: Optional[bool] = None,
+    cache: Optional[AT.AutotuneCache] = None,
+) -> Array:
+    """The unified LUT-MU entry point: ``x`` → approximate ``x @ W``.
+
+    Args:
+      x: the input, per ``input_kind``:
+        ``"full"``    (B, D) activations — split dims are gathered here;
+        ``"split"``   (B, C, I) pre-gathered split values;
+        ``"package"`` (B, I·C) cluster-ordered pruned package from an
+        upstream LUT-MU (the paper's chained hand-off).
+      params: tree + LUT (+ dequant epilogue).  Use
+        :func:`params_from_arrays` to bundle a raw param dict.
+      backend: ``"auto"`` (see :func:`select_backend`) or one of
+        ``"ref" | "unfused" | "fused"``.  ``REPRO_LUTMU_BACKEND`` overrides
+        ``"auto"``.
+      tiles: explicit fused-kernel tiling; default resolves through the
+        autotuner (cache → measured if ``autotune`` → heuristic).
+      autotune: measure candidate tilings for unseen shapes and persist the
+        winner (also enabled globally by ``REPRO_AUTOTUNE=1``).
+      interpret: Pallas interpret mode; default: on unless running on TPU.
+
+    Returns:
+      (B, N) float32.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    xs = _to_split_values(x, params, input_kind)
+    b, c, depth = xs.shape
+    n = params.lut.shape[-1]
+
+    if backend == "auto":
+        backend = os.environ.get("REPRO_LUTMU_BACKEND", "auto")
+    if backend == "auto":
+        backend = select_backend(b, c, n, depth, params.lut.dtype, tiles=tiles)
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be 'auto' or one of {BACKENDS}, "
+                         f"got {backend!r}")
+
+    if backend == "ref":
+        return _run_ref(xs, params)
+    if tiles is None:
+        tiles = AT.get_tiles(
+            b, c, n, depth, params.lut.dtype, backend=backend,
+            allow_measure=autotune, interpret=interpret, cache=cache,
+        )
+    if backend == "unfused":
+        return _run_unfused(xs, params, tiles, interpret)
+    return _run_fused(xs, params, tiles, interpret)

@@ -13,15 +13,12 @@ import jax.numpy as jnp
 
 from repro.core.maddness import HashTree, MaddnessParams, gather_split_values
 from repro.core.pruning import PruningPlan, pruned_to_split_values
+from repro.kernels.dispatch import default_interpret as _default_interpret
 from repro.kernels.fused_lutmu import fused_lutmu_pallas
 from repro.kernels.lut_aggregate import lut_aggregate_pallas
 from repro.kernels.maddness_encode import encode_onehot_pallas
 
 Array = jax.Array
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def encode_onehot(x_split: Array, tree: HashTree, *,

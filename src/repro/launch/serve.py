@@ -34,13 +34,18 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--amm", action="store_true",
                     help="serve MLPs through the LUT-MU path")
+    ap.add_argument("--amm-backend", default="auto",
+                    choices=("auto", "ref", "unfused", "fused"),
+                    help="LUT-MU engine backend (kernels.dispatch); "
+                         "'auto' picks per shape/dtype/platform")
     ap.add_argument("--ckpt")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.amm:
         cfg = dataclasses.replace(
-            cfg, amm=dataclasses.replace(cfg.amm, enabled=True))
+            cfg, amm=dataclasses.replace(cfg.amm, enabled=True,
+                                         backend=args.amm_backend))
     key = jax.random.PRNGKey(0)
     dtype = jnp.float32 if args.reduced else jnp.bfloat16
     params = MD.init_params(cfg, key, dtype, serving=args.amm)

@@ -8,8 +8,11 @@ approximate matmuls, chained per the paper's pruning dataflow:
                                                          ▼
                       package ──encode(down-tree)──► lut_down ──► full d_model
 
-Because gate and up share the *same* input, one encode serves both — the
-paper's intra-layer redundancy elimination appears here as a shared encoder.
+Because gate and up share the *same* tree, the split-value gather (the
+allocator stage) runs once and serves both — the paper's intra-layer
+redundancy elimination.  The comparator encode itself runs per projection
+inside the engine (it is VPU-cheap relative to the contraction, and the
+fused kernel re-derives it per tile by design).
 Gate/up LUTs are parameter-pruned to the down-encode's split dims
 (``I·C_down = d_ff/2`` columns at the default 4/8 resolution — the paper's
 headline 50 %); the down projection emits full width for the residual
@@ -29,6 +32,7 @@ import numpy as np
 from repro.core import lut_mu as LM
 from repro.core import maddness as M
 from repro.core import pruning as P
+from repro.kernels import dispatch as D
 from repro.models.config import AMMConfig, ModelConfig
 
 Array = jax.Array
@@ -79,48 +83,41 @@ def init_amm_mlp_params(cfg: ModelConfig, key, dtype=jnp.int8) -> dict:
     return out
 
 
-def _lut_contract(onehot: Array, lut: Array, scale: Array, offset: Array) -> Array:
-    """(T, C, G) one-hot × (C, G, N) LUT → (T, N) f32, int8- or float-path."""
-    t = onehot.shape[0]
-    n = lut.shape[-1]
-    if lut.dtype == jnp.int8:
-        oh = onehot.astype(jnp.int8).reshape(t, -1)
-        acc = jax.lax.dot_general(
-            oh, lut.reshape(-1, n), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        return acc.astype(jnp.float32) * scale + offset
-    oh = onehot.reshape(t, -1).astype(lut.dtype)
-    return (oh @ lut.reshape(-1, n)).astype(jnp.float32) * scale + offset
-
-
 def amm_mlp_apply(params: dict, x: Array, cfg: ModelConfig) -> Array:
-    """(B, S, D) → (B, S, D) through the pruned LUT-MU MLP chain."""
+    """(B, S, D) → (B, S, D) through the pruned LUT-MU MLP chain.
+
+    Every matmul routes through the unified engine
+    (``kernels.dispatch.lutmu_matmul``); ``cfg.amm.backend`` picks the
+    backend (default ``"auto"``).  Gate and up share the same tree, so the
+    split values are gathered once and handed over as ``input_kind="split"``.
+    """
     b, s, d = x.shape
     a = cfg.amm
+    be = a.backend
     xt = x.reshape(b * s, d)
 
-    # --- shared up/gate encode (one tree for both LUTs)
-    up_tree = M.HashTree(params["up_split_dims"], params["up_thresholds"])
-    xs = M.gather_split_values(xt.astype(jnp.float32), up_tree)
-    onehot = M.encode_onehot(xs, up_tree)
-    gate = _lut_contract(onehot, params["lut_gate"],
-                         params["lut_gate_scale"], params["lut_gate_offset"])
-    up = _lut_contract(onehot, params["lut_up"],
-                       params["lut_up_scale"], params["lut_up_offset"])
+    # --- shared up/gate split-value gather (one tree for both LUTs)
+    gate_p = D.params_from_arrays(
+        params["up_split_dims"], params["up_thresholds"], params["lut_gate"],
+        params["lut_gate_scale"], params["lut_gate_offset"])
+    up_p = D.params_from_arrays(
+        params["up_split_dims"], params["up_thresholds"], params["lut_up"],
+        params["lut_up_scale"], params["lut_up_offset"])
+    xs = M.gather_split_values(xt.astype(jnp.float32), gate_p.tree)
+    gate = D.lutmu_matmul(xs, gate_p, backend=be, input_kind="split")
+    up = D.lutmu_matmul(xs, up_p, backend=be, input_kind="split")
     h = jax.nn.silu(gate) * up  # elementwise — dimension-preserving, prunable
 
     # --- down projection
-    down_tree = M.HashTree(params["down_split_dims"], params["down_thresholds"])
+    down_p = D.params_from_arrays(
+        params["down_split_dims"], params["down_thresholds"],
+        params["lut_down"], params["lut_down_scale"],
+        params["lut_down_offset"])
     if a.prune:
-        plan = P.PruningPlan(jnp.zeros((0,), jnp.int32),
-                             consumer_codebooks=cfg.d_ff // a.d_sub,
-                             consumer_depth=a.depth)
-        hs = P.pruned_to_split_values(h, plan)
+        # gate/up emitted the cluster-ordered pruned package
+        out = D.lutmu_matmul(h, down_p, backend=be, input_kind="package")
     else:
-        hs = M.gather_split_values(h, down_tree)
-    onehot_d = M.encode_onehot(hs, down_tree)
-    out = _lut_contract(onehot_d, params["lut_down"],
-                        params["lut_down_scale"], params["lut_down_offset"])
+        out = D.lutmu_matmul(h, down_p, backend=be, input_kind="full")
     return out.reshape(b, s, d).astype(x.dtype)
 
 

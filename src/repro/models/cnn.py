@@ -189,13 +189,15 @@ def resnet9_train(cfg: ResNet9Config, x: np.ndarray, y: np.ndarray, *,
 def resnet9_amm_conv_fns(params: dict, calib_x: np.ndarray, *,
                          mode: str = "kn2col", d_sub: int = 8, depth: int = 4,
                          layers: Optional[Sequence[str]] = None,
-                         quantize_int8: bool = False) -> Tuple[dict, dict]:
+                         quantize_int8: bool = False,
+                         backend: str = "auto") -> Tuple[dict, dict]:
     """Fit LUT-MU substitutes for conv layers 2..7 (paper §VI-B: first conv
     and final FC stay exact).
 
     mode: "kn2col" (paper/LUT-MU) or "im2col" (original Halutmatmul,
     d_sub = K·K).  Returns (conv_fns, fitted) where fitted[name] holds the
-    AMM params for resource accounting.
+    AMM params for resource accounting.  ``backend`` threads to the unified
+    engine (``kernels.dispatch.lutmu_matmul``) for every substituted matmul.
     """
     layers = list(layers if layers is not None else _CONV_ORDER[1:])
     conv_fns, fitted = {}, {}
@@ -231,7 +233,8 @@ def resnet9_amm_conv_fns(params: dict, calib_x: np.ndarray, *,
                 sub, w.reshape(-1, cout), None, c_books, depth=depth,
                 quantize_int8=quantize_int8)
             conv_fns[name] = partial(
-                CV.conv_im2col, matmul=lambda a, _w, lin=lin: lin(a))
+                CV.conv_im2col,
+                matmul=lambda a, _w, lin=lin: lin(a, backend=backend))
             fitted[name] = [lin]
         else:  # kn2col: one LUT-MU per kernel tap
             rows = xin.reshape(-1, cin)
@@ -246,6 +249,7 @@ def resnet9_amm_conv_fns(params: dict, calib_x: np.ndarray, *,
                 taps.append(lin)
             conv_fns[name] = partial(
                 CV.conv_kn2col,
-                tap_matmuls=[lambda a, l=l: l(a) for l in taps])
+                tap_matmuls=[lambda a, l=l: l(a, backend=backend)
+                             for l in taps])
             fitted[name] = taps
     return conv_fns, fitted

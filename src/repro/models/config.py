@@ -20,6 +20,7 @@ class AMMConfig:
     """
 
     enabled: bool = False
+    backend: str = "auto"     # LUT-MU engine backend: auto|ref|unfused|fused
     d_sub: int = 8            # codebook length (paper default)
     depth: int = 4            # I — split dims per codebook (G = 2**I)
     quantize_int8: bool = True

@@ -1,0 +1,215 @@
+"""Unified execution engine tests: backend parity on a shape grid, input-kind
+consistency, the ``auto`` selection rules, and the autotune cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import maddness as M
+from repro.kernels import autotune as AT
+from repro.kernels import dispatch as D
+from repro.kernels import ref
+
+# (B, D, N, C, I) — includes non-128-aligned N, non-8-aligned B, depth != 4
+SHAPES = [
+    (32, 32, 24, 4, 4),
+    (33, 64, 129, 8, 3),
+    (7, 48, 16, 6, 2),
+    (64, 128, 256, 16, 4),
+]
+
+
+def _fit(B, D, N, C, I, int8=False, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(256, D)).astype(np.float32)
+    w = rng.normal(size=(D, N)).astype(np.float32)
+    p = M.fit_maddness(x, w, C, depth=I, quantize_int8=int8,
+                       optimize_prototypes=False)
+    xt = jnp.asarray(rng.normal(size=(B, D)).astype(np.float32))
+    return p, xt
+
+
+# ---------------------------------------------------------------------------
+# Backend parity.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("int8", [False, True])
+def test_backends_agree_with_oracle(shape, int8):
+    """ref / unfused / fused all match the pure-jnp oracle on every shape."""
+    p, xt = _fit(*shape, int8=int8)
+    xs = M.gather_split_values(xt, p.tree)
+    want = ref.fused_lutmu_ref(xs, p.tree.thresholds, p.lut, p.lut_scale,
+                               p.lut_offset)
+    for backend in D.BACKENDS:
+        got = D.lutmu_matmul(xt, p, backend=backend, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+            err_msg=f"backend={backend} shape={shape} int8={int8}")
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_backends_agree_pairwise_int8(shape):
+    """int8 accumulates in exact int32, so backends agree to within the
+    dequant epilogue's rounding (XLA may fuse ``acc·scale + offset`` into an
+    fma in one lowering and not another — a 1-ulp-class difference)."""
+    p, xt = _fit(*shape, int8=True)
+    outs = [np.asarray(D.lutmu_matmul(xt, p, backend=b, interpret=True))
+            for b in D.BACKENDS]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-3, atol=1e-5)
+
+
+def test_auto_backend_runs_and_matches():
+    p, xt = _fit(64, 64, 48, 8, 4)
+    want = D.lutmu_matmul(xt, p, backend="ref")
+    got = D.lutmu_matmul(xt, p, backend="auto")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Input kinds.
+# ---------------------------------------------------------------------------
+
+
+def test_input_kinds_consistent():
+    p, xt = _fit(16, 64, 32, 8, 4)
+    xs = M.gather_split_values(xt, p.tree)
+    # cluster-ordered package: position l*C + c holds level-l of codebook c
+    pkg = jnp.transpose(xs, (0, 2, 1)).reshape(xs.shape[0], -1)
+    full = D.lutmu_matmul(xt, p, backend="ref", input_kind="full")
+    split = D.lutmu_matmul(xs, p, backend="ref", input_kind="split")
+    package = D.lutmu_matmul(pkg, p, backend="ref", input_kind="package")
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(split))
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(package))
+
+
+def test_bad_args_raise():
+    p, xt = _fit(8, 32, 16, 4, 3)
+    with pytest.raises(ValueError):
+        D.lutmu_matmul(xt, p, backend="mxu")
+    with pytest.raises(ValueError):
+        D.lutmu_matmul(xt, p, input_kind="columns")
+
+
+# ---------------------------------------------------------------------------
+# Selection policy (pure function — testable off-TPU).
+# ---------------------------------------------------------------------------
+
+
+def test_select_backend_rules():
+    # off-TPU: always ref
+    assert D.select_backend(1024, 32, 1024, 4, platform="cpu") == "ref"
+    # sub-MXU-tile problems: ref even on TPU
+    assert D.select_backend(4, 32, 1024, 4, platform="tpu") == "ref"
+    assert D.select_backend(1024, 32, 64, 4, platform="tpu") == "ref"
+    assert D.select_backend(1024, 2, 1024, 4, platform="tpu") == "ref"
+    # int8 LUT: fused (int8 one-hot + int32 accumulator stay in VMEM)
+    assert D.select_backend(1024, 32, 1024, 4, jnp.int8,
+                            platform="tpu") == "fused"
+    # bulk float path: fused
+    assert D.select_backend(1024, 32, 1024, 4, platform="tpu") == "fused"
+    # many N tiles × deep trees: unfused (encode once, spill the one-hot)
+    assert D.select_backend(
+        1024, 32, 8192, 6, platform="tpu",
+        tiles=AT.TileConfig(256, 256, 8)) == "unfused"
+
+
+def test_env_override(monkeypatch):
+    p, xt = _fit(8, 32, 16, 4, 3)
+    calls = {}
+    real = D._run_ref
+
+    def spy(xs, params):
+        calls["ref"] = True
+        return real(xs, params)
+
+    monkeypatch.setattr(D, "_run_ref", spy)
+    monkeypatch.setenv("REPRO_LUTMU_BACKEND", "ref")
+    D.lutmu_matmul(xt, p, backend="auto")
+    assert calls.get("ref")
+
+
+# ---------------------------------------------------------------------------
+# Autotune: VMEM budget, heuristic, cache round-trip.
+# ---------------------------------------------------------------------------
+
+
+def test_candidates_respect_vmem_budget():
+    cands = AT.candidate_tiles(4096, 64, 4096, 4, lut_itemsize=4)
+    assert cands
+    budget = AT.VMEM_BUDGET_BYTES * AT.VMEM_FRACTION
+    for t in cands:
+        assert AT.fused_vmem_bytes(t, 4, 4) <= budget
+
+
+def test_heuristic_clamps_to_problem():
+    t = AT.heuristic_tiles(16, 4, 48, 4)
+    assert t.block_b <= 16  # ceil_to(16, 8)
+    assert t.block_n <= 128  # ceil_to(48, 128)
+    assert t.block_c <= 4
+
+
+def test_autotune_cache_roundtrip(tmp_path):
+    path = tmp_path / "cache.json"
+    cache = AT.AutotuneCache(path)
+    key = AT.shape_key("cpu", "fused", 256, 16, 256, 4, jnp.float32)
+    assert cache.get(key) is None
+    cache.put(key, AT.TileConfig(128, 256, 8), us=42.0)
+    cache.save()
+
+    reloaded = AT.AutotuneCache(path)
+    assert reloaded.get(key) == AT.TileConfig(128, 256, 8)
+    assert len(reloaded) == 1
+
+
+def test_autotune_cache_tolerates_corruption(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json")
+    cache = AT.AutotuneCache(path)
+    assert len(cache) == 0
+
+
+def test_get_tiles_prefers_cache_then_heuristic(tmp_path):
+    cache = AT.AutotuneCache(tmp_path / "cache.json")
+    pinned = AT.TileConfig(64, 128, 4)
+    key = AT.shape_key("cpu", "fused", 64, 8, 128, 4, jnp.float32)
+    cache.put(key, pinned)
+    assert AT.get_tiles(64, 8, 128, 4, platform="cpu", cache=cache) == pinned
+    # unseen shape, no measuring allowed → heuristic
+    t = AT.get_tiles(64, 8, 256, 4, platform="cpu", cache=cache)
+    assert t == AT.heuristic_tiles(64, 8, 256, 4)
+
+
+def test_measured_autotune_persists_and_rehits(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    cache = AT.AutotuneCache(tmp_path / "cache.json")
+    kw = dict(b=16, c=4, n=32, depth=2, platform="cpu", cache=cache)
+    monkeypatch.setattr(
+        AT, "candidate_tiles",
+        lambda *a, **k: [AT.TileConfig(16, 128, 4), AT.TileConfig(8, 128, 2)])
+    best = AT.get_tiles(**kw, allow_measure=True, interpret=True)
+    assert cache.get(AT.shape_key("cpu", "fused", 16, 4, 32, 2,
+                                  jnp.float32)) == best
+    # second resolve must hit the persisted cache, never measure
+    monkeypatch.setattr(AT, "measure_fused_tiles",
+                        lambda *a, **k: pytest.fail("measured on cache hit"))
+    fresh = AT.AutotuneCache(tmp_path / "cache.json")
+    assert AT.get_tiles(**{**kw, "cache": fresh}) == best
+
+
+def test_dispatch_fused_with_explicit_and_autotuned_tiles(tmp_path):
+    p, xt = _fit(32, 32, 24, 4, 4)
+    want = D.lutmu_matmul(xt, p, backend="ref")
+    cache = AT.AutotuneCache(tmp_path / "cache.json")
+    got_explicit = D.lutmu_matmul(xt, p, backend="fused", interpret=True,
+                                  tiles=AT.TileConfig(16, 128, 2))
+    got_tuned = D.lutmu_matmul(xt, p, backend="fused", interpret=True,
+                               autotune=True, cache=cache)
+    np.testing.assert_allclose(np.asarray(got_explicit), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_tuned), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert len(cache) == 1  # the measured winner was persisted
