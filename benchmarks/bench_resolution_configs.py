@@ -1,0 +1,58 @@
+"""Resolution-config sweep: the paper's int-precision resource knob, end to
+end through the offline compiler and the unified online engine.
+
+For each resolution config (float32 / int16 / int8 / int4) the same
+calibrated two-layer cascade is compiled (prune → quantise → pack), then
+its layers run through ``lutmu_matmul``.  Emitted per config:
+
+  * ``us`` — median µs/call of the full chain through the engine;
+  * ``lut_bytes`` — shipped (pruned+quantised) LUT bytes from the
+    compiler's resource report (the paper's FPGA-LUT resource proxy);
+  * ``rel_err`` — output error vs the exact dense cascade (the
+    accuracy-vs-resource trade-off axis of the paper's Figs. 11–13).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_resolution_configs
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.compiler import RESOLUTIONS, compile_chain
+
+
+def run(batch: int = 256) -> None:
+    rng = np.random.default_rng(0)
+    d, h, o = 128, 128, 64
+    centers = rng.normal(size=(48, d)).astype(np.float32)
+    calib = (centers[rng.integers(0, 48, 2048)]
+             + 0.05 * rng.normal(size=(2048, d)).astype(np.float32))
+    w0 = (rng.normal(size=(d, h)) / np.sqrt(d)).astype(np.float32)
+    w1 = (rng.normal(size=(h, o)) / np.sqrt(h)).astype(np.float32)
+    b0 = 0.1 * rng.normal(size=(h,)).astype(np.float32)
+    b1 = 0.1 * rng.normal(size=(o,)).astype(np.float32)
+
+    x_np = (centers[rng.integers(0, 48, batch)]
+            + 0.05 * rng.normal(size=(batch, d)).astype(np.float32))
+    x = jnp.asarray(x_np)
+    exact = np.maximum(x_np @ w0 + b0, 0.0) @ w1 + b1
+    exact_norm = float(np.linalg.norm(exact))
+
+    for name in RESOLUTIONS:
+        result = compile_chain(
+            [w0, w1], [b0, b1], calib, num_codebooks=[16, 16],
+            depths=[4, 4], activations=["relu"], resolution=name,
+            batch_hint=batch)
+        chain = result.chain
+        us = time_us(lambda xv: chain(xv), x)
+        out = np.asarray(chain(x))
+        rel = float(np.linalg.norm(out - exact)) / exact_norm
+        cfg_rep = result.report["configs"][name]
+        emit(f"resolution/{name}", us,
+             f"lut_bytes={cfg_rep['pruned_lut_bytes']};"
+             f"savings_vs_f32_unpruned="
+             f"{cfg_rep['savings_vs_float32_unpruned']};rel_err={rel:.4f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -12,12 +12,13 @@ def main() -> None:
     from benchmarks import (bench_fig1_scaling, bench_fig9_pruning,
                             bench_fig10_depth, bench_fig11_scalability,
                             bench_fig12_problem_size, bench_fig13_pareto,
-                            bench_table2_e2e)
+                            bench_resolution_configs, bench_table2_e2e)
     print("name,us_per_call,derived")
     failed = []
     for mod in (bench_fig1_scaling, bench_fig11_scalability,
                 bench_fig12_problem_size, bench_fig13_pareto,
-                bench_table2_e2e, bench_fig10_depth, bench_fig9_pruning):
+                bench_table2_e2e, bench_fig10_depth, bench_fig9_pruning,
+                bench_resolution_configs):
         try:
             mod.run()
         except Exception as e:  # noqa

@@ -50,3 +50,20 @@ h = jnp.maximum(unpruned.layers[0](x), 0)
 out_unpruned = unpruned.layers[1](h)
 print("pruned == unpruned (lossless):",
       bool(jnp.all(out_pruned == out_unpruned)))
+
+# --- the offline compiler: calibrate → prune → quantise → pack ------------
+import tempfile
+
+from repro.compiler import compile_chain, load_artifact
+
+art_dir = tempfile.mkdtemp(prefix="lutmu_artifact_")
+result = compile_chain(
+    [W, W2], [None, None], calib, num_codebooks=[C, N // 8], depths=[I, I],
+    activations=["relu"], resolution="int8", out=art_dir)
+reloaded = load_artifact(art_dir).to_chain()
+same = bool(jnp.all(result.chain(x) == reloaded(x)))
+print(f"\ncompiled int8 artifact → {art_dir}")
+print("artifact round-trip bit-identical:", same)
+for cfg_name, rec in result.report["configs"].items():
+    print(f"  {cfg_name:>8}: {rec['pruned_lut_bytes']:6d} LUT bytes "
+          f"({rec['savings_vs_float32_unpruned']:.1f}x vs f32 unpruned)")

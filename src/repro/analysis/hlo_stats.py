@@ -14,6 +14,18 @@ from __future__ import annotations
 import re
 from typing import Dict
 
+def cost_analysis_dict(compiled) -> Dict:
+    """Normalise ``Compiled.cost_analysis()`` across jax versions.
+
+    jax ≤ 0.4.x returns a one-element list of dicts (one per program);
+    newer jax returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

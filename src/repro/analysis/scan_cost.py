@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.analysis.hlo_stats import collective_bytes_from_hlo
+from repro.analysis.hlo_stats import (collective_bytes_from_hlo,
+                                      cost_analysis_dict)
 from repro.distributed.sharding import (MeshAxes, make_constrainer,
                                         param_shardings)
 from repro.launch.shapes import ShapeCell
@@ -44,7 +45,7 @@ def _measure(fn, arg_shapes, arg_shardings, mesh) -> dict:
     with mesh, A.unroll_chunks():
         jitted = jax.jit(fn, in_shardings=arg_shardings)
         compiled = jitted.lower(*arg_shapes).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes_from_hlo(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -1,0 +1,246 @@
+"""Servable artifact: versioned manifest + packed tensors on disk.
+
+The compiler's output format.  An artifact directory holds
+
+  ``manifest.json``  — format tag, schema version, kind, resolution config,
+    per-layer records (shapes, dtypes, pruning metadata, the planner's
+    backend/tile choices), the resource report, and the sha256 of the
+    tensor file;
+  ``tensors.npz``    — the packed arrays (compressed; int4 LUTs ship two
+    entries per byte).
+
+Writes are atomic (tmp dir + ``os.replace``, the same crash-safety contract
+as ``checkpoint/manager.py``), and loads are paranoid: format/version
+mismatches, a corrupted tensor file (checksum), or missing/mis-shaped
+arrays all raise :class:`ArtifactError` rather than serving garbage.
+
+Two kinds:
+
+  * ``amm_chain`` — a standalone LUT-MU cascade (``Artifact.to_chain`` →
+    ``core.lut_mu.AMMChain``);
+  * ``amm_lm``    — per-transformer-layer AMM-MLP params for a named arch
+    (``Artifact.splice_lm_params`` swaps them into a params tree for
+    ``ServeEngine``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compiler import quantize as Q
+from repro.core import lut_mu as LM
+from repro.core import maddness as M
+from repro.core import pruning as P
+from repro.kernels import autotune as AT
+
+ARTIFACT_FORMAT = "repro-lutmu-artifact"
+ARTIFACT_VERSION = 1
+_TENSORS_FILE = "tensors.npz"
+_MANIFEST_FILE = "manifest.json"
+
+
+class ArtifactError(ValueError):
+    """Unloadable artifact: wrong format/version, corruption, bad schema."""
+
+
+def _sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class Artifact:
+    """A loaded (or about-to-be-saved) compiled model."""
+
+    manifest: dict
+    tensors: Dict[str, np.ndarray]
+
+    @property
+    def kind(self) -> str:
+        return self.manifest["kind"]
+
+    @property
+    def resolution(self) -> str:
+        return self.manifest["resolution"]
+
+    @property
+    def resource_report(self) -> dict:
+        return self.manifest.get("resource_report", {})
+
+    # -- reconstruction ----------------------------------------------------
+    def _layer_lut(self, i: int, rec: dict) -> np.ndarray:
+        if rec.get("int4_packed"):
+            return Q.unpack_int4(self.tensors[f"layer{i}/lut"], rec["cols"])
+        return self.tensors[f"layer{i}/lut"]
+
+    def to_chain(self, apply_recorded_backends: Optional[bool] = None
+                 ) -> LM.AMMChain:
+        """Rebuild the servable :class:`~repro.core.lut_mu.AMMChain`.
+
+        Recorded per-layer backends are applied when the serving platform
+        matches the compile platform (override with
+        ``apply_recorded_backends``); elsewhere they are provenance only
+        and ``"auto"`` re-decides per shape.
+        """
+        if self.kind != "amm_chain":
+            raise ArtifactError(f"kind {self.kind!r} is not an amm_chain")
+        if apply_recorded_backends is None:
+            apply_recorded_backends = (
+                self.manifest.get("platform") == jax.default_backend())
+        layers: List[LM.AMMLinear] = []
+        for i, rec in enumerate(self.manifest["layers"]):
+            t = self.tensors
+            tree = M.HashTree(
+                split_dims=jnp.asarray(t[f"layer{i}/split_dims"]),
+                thresholds=jnp.asarray(t[f"layer{i}/thresholds"]))
+            lut = jnp.asarray(self._layer_lut(i, rec))
+            params = M.MaddnessParams(
+                tree=tree,
+                prototypes=jnp.zeros(lut.shape[:2] + (0,), jnp.float32),
+                lut=lut,
+                lut_scale=jnp.asarray(t[f"layer{i}/lut_scale"]),
+                lut_offset=jnp.asarray(t[f"layer{i}/lut_offset"]),
+            )
+            plan = None
+            if rec["pruned"]:
+                plan = P.PruningPlan(
+                    keep_idx=jnp.asarray(t[f"layer{i}/keep_idx"]),
+                    consumer_codebooks=rec["consumer_codebooks"],
+                    consumer_depth=rec["consumer_depth"])
+            tiles = None
+            if apply_recorded_backends and rec.get("tiles"):
+                tiles = AT.TileConfig.from_dict(rec["tiles"])
+            layers.append(LM.AMMLinear(
+                params=params, out_plan=plan,
+                full_out_features=rec["out_features_full"], tiles=tiles))
+        backends = (tuple(rec["backend"] for rec in self.manifest["layers"])
+                    if apply_recorded_backends else None)
+        return LM.AMMChain(
+            layers=layers,
+            activation_names=tuple(self.manifest["activations"]),
+            backends=backends)
+
+    def lm_layer_params(self) -> List[dict]:
+        """Per-transformer-layer AMM-MLP param dicts (kind ``amm_lm``)."""
+        if self.kind != "amm_lm":
+            raise ArtifactError(f"kind {self.kind!r} is not an amm_lm")
+        out = []
+        for i in range(self.manifest["num_layers"]):
+            prefix = f"layer{i}/"
+            out.append({k[len(prefix):]: jnp.asarray(v)
+                        for k, v in self.tensors.items()
+                        if k.startswith(prefix)})
+        return out
+
+    def splice_lm_params(self, params: dict) -> dict:
+        """Swap the compiled AMM-MLP tables into a dense LM params tree.
+
+        Returns a new params dict whose stacked ``layers`` carry
+        ``amm_mlp`` (the artifact's tables) instead of ``mlp`` — the form
+        ``ServeEngine`` serves when ``cfg.amm.enabled``.
+        """
+        per_layer = self.lm_layer_params()
+        layers = dict(params["layers"])
+        layers.pop("mlp", None)
+        layers["amm_mlp"] = {
+            k: jnp.stack([d[k] for d in per_layer])
+            for k in per_layer[0]}
+        return dict(params, layers=layers)
+
+
+# ---------------------------------------------------------------------------
+# Save / load.
+# ---------------------------------------------------------------------------
+
+
+def save_artifact(directory, artifact: Artifact) -> Path:
+    """Atomically write ``manifest.json`` + ``tensors.npz``."""
+    final = Path(directory)
+    tmp = final.with_name(final.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    np.savez_compressed(tmp / _TENSORS_FILE, **artifact.tensors)
+    manifest = dict(artifact.manifest)
+    manifest.setdefault("format", ARTIFACT_FORMAT)
+    manifest.setdefault("version", ARTIFACT_VERSION)
+    manifest.setdefault("created_unix", time.time())
+    manifest["tensors_sha256"] = _sha256(tmp / _TENSORS_FILE)
+    (tmp / _MANIFEST_FILE).write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic commit
+    artifact.manifest = manifest
+    return final
+
+
+def load_artifact(directory) -> Artifact:
+    """Load + validate an artifact directory (raises :class:`ArtifactError`)."""
+    path = Path(directory)
+    mf = path / _MANIFEST_FILE
+    if not mf.is_file():
+        raise ArtifactError(f"no {_MANIFEST_FILE} in {path}")
+    try:
+        manifest = json.loads(mf.read_text())
+    except ValueError as e:
+        raise ArtifactError(f"corrupt manifest in {path}: {e}") from e
+    if manifest.get("format") != ARTIFACT_FORMAT:
+        raise ArtifactError(
+            f"not a {ARTIFACT_FORMAT} (format={manifest.get('format')!r})")
+    if manifest.get("version") != ARTIFACT_VERSION:
+        raise ArtifactError(
+            f"artifact version {manifest.get('version')!r} != supported "
+            f"{ARTIFACT_VERSION}")
+    tf = path / manifest.get("tensors_file", _TENSORS_FILE)
+    if not tf.is_file():
+        raise ArtifactError(f"missing tensor file {tf.name} in {path}")
+    digest = _sha256(tf)
+    if digest != manifest.get("tensors_sha256"):
+        raise ArtifactError(
+            f"tensor checksum mismatch in {path}: file {digest[:12]}… != "
+            f"manifest {str(manifest.get('tensors_sha256'))[:12]}…")
+    with np.load(tf) as data:
+        tensors = {k: data[k] for k in data.files}
+    art = Artifact(manifest=manifest, tensors=tensors)
+    _validate_schema(art, path)
+    return art
+
+
+def _validate_schema(art: Artifact, path: Path) -> None:
+    if art.kind == "amm_chain":
+        for i, rec in enumerate(art.manifest.get("layers", [])):
+            for key in ("split_dims", "thresholds", "lut", "lut_scale",
+                        "lut_offset"):
+                if f"layer{i}/{key}" not in art.tensors:
+                    raise ArtifactError(
+                        f"layer{i}/{key} missing from tensors in {path}")
+            lut = art._layer_lut(i, rec)
+            g = 2 ** rec["depth"]
+            want = (rec["num_codebooks"], g, rec["cols"])
+            if tuple(lut.shape) != want:
+                raise ArtifactError(
+                    f"layer{i} LUT shape {tuple(lut.shape)} != manifest {want}")
+            if rec["pruned"] and f"layer{i}/keep_idx" not in art.tensors:
+                raise ArtifactError(f"layer{i}/keep_idx missing in {path}")
+    elif art.kind == "amm_lm":
+        if art.manifest.get("num_layers", 0) < 1:
+            raise ArtifactError(f"amm_lm artifact without layers in {path}")
+    else:
+        raise ArtifactError(f"unknown artifact kind {art.kind!r} in {path}")
+
+
+def tiles_to_json(tiles: Optional[AT.TileConfig]) -> Optional[dict]:
+    return None if tiles is None else tiles.to_dict()

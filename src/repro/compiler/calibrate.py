@@ -1,0 +1,166 @@
+"""Offline calibration: fit per-layer MADDNESS trees + prototypes + LUTs.
+
+The first stage of the LUT-MU compiler.  Given trained weights and
+calibration activations it produces one *unpruned, float* set of
+``MaddnessParams`` per layer — the raw material the planner then prunes and
+the quantiser packs.  This absorbs the ad-hoc ``mlp_to_amm``-style helpers
+that used to live in ``models/cnn.py``: those now delegate here.
+
+Chain calibration follows the paper's layer-wise order: stage *i*'s trees
+are trained on the **approximate** activations propagated through the
+already-fitted stages 0..i-1 (so the calibration distribution matches what
+the deployed cascade actually sees), with ridge-regression prototype
+optimisation (MADDNESS §4.2) on by default — the full-width ridge solution
+makes each codebook compensate the others' quantisation error, and is also
+the closed-form optimum of the layer-wise LUT-retraining objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import maddness as M
+
+Array = jax.Array
+
+# elementwise hand-off ops — dimension-preserving, so pruning commutes
+# (paper §V-A1); numpy twins keep offline propagation host-side.
+ACTIVATIONS = {
+    None: lambda v: v,
+    "relu": lambda v: np.maximum(v, 0.0),
+    "gelu": lambda v: np.asarray(jax.nn.gelu(jnp.asarray(v))),
+    "silu": lambda v: np.asarray(jax.nn.silu(jnp.asarray(v))),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationConfig:
+    """Knobs of the offline fit (all layers share them)."""
+
+    ridge_lambda: float = 1.0        # prototype ridge regulariser
+    optimize_prototypes: bool = True  # full-width ridge vs bucket means
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class LayerCalibration:
+    """One layer's fitted (unpruned, float) LUT-MU parameters + metadata."""
+
+    params: M.MaddnessParams   # float32 LUT, bias folded into lut_offset
+    in_features: int
+    out_features: int
+    activation: Optional[str]  # elementwise op applied AFTER this layer
+
+    @property
+    def num_codebooks(self) -> int:
+        return self.params.tree.num_codebooks
+
+    @property
+    def depth(self) -> int:
+        return self.params.tree.depth
+
+
+def calibrate_layer(
+    calib_x: np.ndarray,
+    weight: np.ndarray,
+    bias: Optional[np.ndarray],
+    num_codebooks: int,
+    depth: int,
+    activation: Optional[str] = None,
+    config: CalibrationConfig = CalibrationConfig(),
+    seed_offset: int = 0,
+) -> LayerCalibration:
+    """Fit one layer: trees → ridge prototypes → float LUT."""
+    params = M.fit_maddness(
+        np.asarray(calib_x, np.float64), np.asarray(weight, np.float32),
+        num_codebooks, depth=depth,
+        bias=None if bias is None else np.asarray(bias, np.float32),
+        quantize_int8=False,
+        optimize_prototypes=config.optimize_prototypes,
+        ridge_lambda=config.ridge_lambda,
+        seed=config.seed + seed_offset,
+    )
+    return LayerCalibration(
+        params=params,
+        in_features=int(weight.shape[0]),
+        out_features=int(weight.shape[1]),
+        activation=activation,
+    )
+
+
+def calibrate_chain(
+    weights: Sequence[np.ndarray],
+    biases: Sequence[Optional[np.ndarray]],
+    calib_x: np.ndarray,
+    num_codebooks: Sequence[int],
+    depths: Sequence[int],
+    activations: Sequence[Optional[str]] = (),
+    config: CalibrationConfig = CalibrationConfig(),
+) -> List[LayerCalibration]:
+    """Fit a cascade layer-by-layer on propagated approximate activations.
+
+    ``activations[i]`` sits between stage *i* and *i+1*; unknown names
+    raise.  Returns unpruned calibrations — chain pruning is the planner's
+    job, and is lossless, so calibrating unpruned is exact.
+    """
+    n_layers = len(weights)
+    acts = tuple(activations) if activations else (None,) * (n_layers - 1)
+    if len(acts) != n_layers - 1:
+        raise ValueError(
+            f"{n_layers} layers need {n_layers - 1} activations, got {len(acts)}")
+    for a in acts:
+        if a not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {a!r}")
+
+    out: List[LayerCalibration] = []
+    x = np.asarray(calib_x, np.float64)
+    for i in range(n_layers):
+        act = acts[i] if i < n_layers - 1 else None
+        cal = calibrate_layer(x, weights[i], biases[i], num_codebooks[i],
+                              depths[i], activation=act, config=config,
+                              seed_offset=i)
+        out.append(cal)
+        if i < n_layers - 1:
+            y = np.asarray(M.maddness_matmul(
+                jnp.asarray(x, jnp.float32), cal.params))
+            x = ACTIVATIONS[act](y).astype(np.float64)
+    return out
+
+
+def capture_lm_mlp_inputs(params: dict, cfg, tokens: np.ndarray) -> List[np.ndarray]:
+    """Per-layer MLP-input activations of a trained LM on sample tokens.
+
+    Thin wrapper over ``models.model.capture_mlp_inputs`` (imported lazily —
+    the compiler sits above ``models``).
+    """
+    from repro.models import model as MD
+
+    caps = MD.capture_mlp_inputs(params, jnp.asarray(tokens, jnp.int32), cfg,
+                                 compute_dtype=jnp.float32)
+    return [np.asarray(c, np.float64) for c in caps]
+
+
+def calibrate_lm_mlp_layers(params: dict, cfg, tokens: np.ndarray,
+                            seed: int = 0) -> List[dict]:
+    """Fit AMM-MLP params for every transformer layer from live activations.
+
+    Each layer is fitted by ``models.amm_mlp.fit_from_dense`` (the canonical
+    single-layer gate/up/down fit) on the activations *that layer* actually
+    receives, captured with :func:`capture_lm_mlp_inputs`.  Returns one
+    param dict per layer, keyed per ``amm_mlp_param_shapes``.
+    """
+    from repro.models import amm_mlp as AMM
+
+    caps = capture_lm_mlp_inputs(params, cfg, tokens)
+    fitted = []
+    for l, acts in enumerate(caps):
+        lp = jax.tree.map(lambda a: a[l], params["layers"])
+        fitted.append(AMM.fit_from_dense(
+            acts, np.asarray(lp["mlp"]["w_gate"]),
+            np.asarray(lp["mlp"]["w_up"]), np.asarray(lp["mlp"]["w_down"]),
+            cfg, seed=seed + l))
+    return fitted

@@ -1,0 +1,84 @@
+"""Chain planner: wire pruning plans and pick per-layer execution configs.
+
+Second compiler stage.  Takes the calibrator's per-layer fits and decides,
+statically and offline, everything the online engine would otherwise decide
+per call:
+
+  * **pruning plans** — each producer layer is parameter-pruned to exactly
+    the split dims its consumer's encode reads (``core.pruning``), so the
+    shipped LUT holds ``I'·C'`` columns instead of ``D_out``;
+  * **backend choice** — the unified engine's ``select_backend`` policy,
+    evaluated once at compile time against a representative batch size and
+    the *post-quantisation* LUT dtype, and recorded in the artifact;
+  * **tile choice** — the fused-kernel tiling through ``kernels.autotune``
+    (heuristic by default, measured when ``autotune=True``), also recorded
+    so serving never re-tunes a compiled model.
+
+Plans are compile-time metadata: the artifact stores them, and loading
+applies the recorded backends only when the serving platform matches the
+compile platform (a TPU-compiled plan is a hint, not a constraint, on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compiler.calibrate import LayerCalibration
+from repro.compiler.quantize import ResolutionConfig
+from repro.core import pruning as P
+from repro.kernels import autotune as AT
+from repro.kernels import dispatch as D
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    """Everything the compiler decided about one layer."""
+
+    prune_plan: Optional[P.PruningPlan]  # pruning of this layer's OUTPUT
+    cols: int                            # shipped LUT columns
+    backend: str                         # resolved engine backend
+    tiles: Optional[AT.TileConfig]       # fused/unfused tiling (None = ref)
+    platform: str                        # platform the choice was made on
+
+
+def plan_chain(
+    calibs: Sequence[LayerCalibration],
+    resolution: ResolutionConfig,
+    *,
+    prune: bool = True,
+    batch_hint: int = 256,
+    platform: Optional[str] = None,
+    autotune: bool = False,
+) -> List[LayerPlan]:
+    """Plan a calibrated cascade: pruning hand-offs + execution configs.
+
+    ``batch_hint`` is the representative serving batch the backend/tile
+    policy is evaluated at (the recorded choice; ``"auto"`` at run time
+    would re-derive the same answer for that shape).
+    """
+    platform = platform or jax.default_backend()
+    plans: List[LayerPlan] = []
+    for i, cal in enumerate(calibs):
+        prune_plan = None
+        if prune and i < len(calibs) - 1:
+            nxt = calibs[i + 1]
+            prune_plan = P.plan_from_consumer_tree(
+                nxt.params.tree, consumer_in_dim=cal.out_features)
+        cols = prune_plan.num_kept if prune_plan is not None else cal.out_features
+        backend = D.select_backend(
+            batch_hint, cal.num_codebooks, cols, cal.depth,
+            lut_dtype=resolution.runtime_dtype, platform=platform)
+        tiles = None
+        if backend != "ref":
+            tiles = AT.get_tiles(
+                batch_hint, cal.num_codebooks, cols, cal.depth,
+                resolution.runtime_dtype, platform=platform, backend=backend,
+                allow_measure=autotune, interpret=platform != "tpu")
+        plans.append(LayerPlan(prune_plan=prune_plan, cols=cols,
+                               backend=backend, tiles=tiles,
+                               platform=platform))
+    return plans

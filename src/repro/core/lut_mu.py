@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core import maddness as M
 from repro.core import pruning as P
+from repro.kernels import autotune as AT
 from repro.kernels import dispatch as D
 
 Array = jax.Array
@@ -42,14 +43,18 @@ class AMMLinear:
     params: M.MaddnessParams
     out_plan: Optional[P.PruningPlan]  # pruning of *our output*
     full_out_features: int  # D_out before parameter pruning (static)
+    # fused/unfused tiling fixed by the offline compiler's planner (static);
+    # None ⇒ the engine resolves tiles per call (cache → heuristic).
+    tiles: Optional[AT.TileConfig] = None
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
-        return (self.params, self.out_plan), (self.full_out_features,)
+        return (self.params, self.out_plan), (self.full_out_features,
+                                              self.tiles)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], aux[0])
+        return cls(children[0], children[1], *aux)
 
     # -- shapes -------------------------------------------------------------
     @property
@@ -68,12 +73,12 @@ class AMMLinear:
     def __call__(self, x: Array, *, backend: str = "auto") -> Array:
         """Full-width input path."""
         return D.lutmu_matmul(x, self.params, backend=backend,
-                              input_kind="full")
+                              input_kind="full", tiles=self.tiles)
 
     def apply_package(self, x_pruned: Array, *, backend: str = "auto") -> Array:
         """Pruned-package input path (chained mode)."""
         return D.lutmu_matmul(x_pruned, self.params, backend=backend,
-                              input_kind="package")
+                              input_kind="package", tiles=self.tiles)
 
     # -- resource accounting (paper Figs. 11/12) -----------------------------
     def lut_bytes(self) -> int:
@@ -97,6 +102,9 @@ class AMMChain:
 
     layers: List[AMMLinear]
     activation_names: Tuple[Optional[str], ...]  # static; len == len(layers)-1
+    # per-layer engine backends recorded by the offline compiler's planner;
+    # None ⇒ every layer follows the ``backend`` kwarg (default "auto").
+    backends: Optional[Tuple[str, ...]] = None
 
     _ACTS = {
         None: lambda x: x,
@@ -106,18 +114,35 @@ class AMMChain:
     }
 
     def tree_flatten(self):
-        return (self.layers,), (self.activation_names,)
+        return (self.layers,), (self.activation_names, self.backends)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(list(children[0]), aux[0])
+        return cls(list(children[0]), *aux)
+
+    def _layer_backend(self, i: int, backend: str) -> str:
+        if backend == "auto" and self.backends is not None:
+            return self.backends[i]
+        return backend
 
     def __call__(self, x: Array, *, backend: str = "auto") -> Array:
-        h = self.layers[0](x, backend=backend)
+        h = self.layers[0](x, backend=self._layer_backend(0, backend))
         for i, layer in enumerate(self.layers[1:]):
             h = self._ACTS[self.activation_names[i]](h)
-            h = layer.apply_package(h, backend=backend)
+            be = self._layer_backend(i + 1, backend)
+            if self.layers[i].is_pruned:
+                # producer emitted the cluster-ordered pruned package
+                h = layer.apply_package(h, backend=be)
+            else:
+                h = layer(h, backend=be)  # unpruned hand-off: full width
         return h
+
+    @classmethod
+    def load(cls, path) -> "AMMChain":
+        """Load a compiled chain from an offline-compiler artifact dir."""
+        from repro.compiler.artifact import load_artifact  # lazy: no cycle
+
+        return load_artifact(path).to_chain()
 
     def lut_bytes(self) -> int:
         return sum(l.lut_bytes() for l in self.layers)

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis.hlo_stats import collective_bytes_from_hlo
+from repro.analysis.hlo_stats import (collective_bytes_from_hlo,
+                                      cost_analysis_dict as _cost_dict)
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed.sharding import (batch_spec, cache_shardings,
                                         make_constrainer, param_shardings)
@@ -155,7 +156,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, amm: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo)
 

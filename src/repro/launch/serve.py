@@ -38,6 +38,10 @@ def main() -> None:
                     choices=("auto", "ref", "unfused", "fused"),
                     help="LUT-MU engine backend (kernels.dispatch); "
                          "'auto' picks per shape/dtype/platform")
+    ap.add_argument("--artifact",
+                    help="amm_lm artifact dir from `python -m repro.compiler "
+                         "lm` — serve its compiled LUT-MU tables instead of "
+                         "the dense MLPs")
     ap.add_argument("--ckpt")
     args = ap.parse_args()
 
@@ -48,7 +52,9 @@ def main() -> None:
                                          backend=args.amm_backend))
     key = jax.random.PRNGKey(0)
     dtype = jnp.float32 if args.reduced else jnp.bfloat16
-    params = MD.init_params(cfg, key, dtype, serving=args.amm)
+    # --artifact serves compiled tables spliced into a *dense* params tree
+    params = MD.init_params(cfg, key, dtype,
+                            serving=args.amm and not args.artifact)
     if args.ckpt:
         from pathlib import Path
         from repro.checkpoint import restore_into
@@ -56,8 +62,13 @@ def main() -> None:
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
         params = restore_into(template, Path(args.ckpt))
 
-    engine = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
-                         compute_dtype=dtype)
+    if args.artifact:
+        engine = ServeEngine.from_artifact(
+            args.artifact, params, cfg, slots=args.slots,
+            max_len=args.max_len, compute_dtype=dtype)
+    else:
+        engine = ServeEngine(params, cfg, slots=args.slots,
+                             max_len=args.max_len, compute_dtype=dtype)
     stream = TokenStream(vocab_size=cfg.vocab_size, batch_size=1, seq_len=16)
     for i in range(args.requests):
         prompt = [int(t) for t in stream.batch(i)["tokens"][0][:8]]

@@ -239,29 +239,32 @@ def decode_step(params: dict, x: Array, cfg: ModelConfig,
                 window: Optional[Array]) -> Tuple[Array, Tuple[Array, Array]]:
     """One-token decode against a KV cache.
 
-    x: (B, 1, D); cache_k/v: (B, S_max, n_kv, hd); pos: scalar int32 —
-    the index of the new token (cache[0:pos] is valid history).
+    x: (B, 1, D); cache_k/v: (B, S_max, n_kv, hd); pos: scalar int32 or a
+    (B,) vector of per-row positions (continuous-batching slots decode at
+    their own offsets) — the index of the new token (cache row ``b``'s
+    ``[0:pos[b]]`` is valid history).
     """
     b, _, d = x.shape
     hd = cfg.resolved_head_dim
     nq, nkv = cfg.num_heads, cfg.num_kv_heads
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    positions = pos_b[:, None]
     q, k, v = _project_qkv(params, x, cfg, positions)
     if cache_k.dtype == jnp.int8:  # §Perf-C3: quantise new KV on write
         k = jnp.clip(jnp.round(k.astype(jnp.float32) / KV_INT8_SCALE),
                      -127, 127)
         v = jnp.clip(jnp.round(v.astype(jnp.float32) / KV_INT8_SCALE),
                      -127, 127)
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k.astype(cache_k.dtype), (0, pos.astype(jnp.int32), 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v.astype(cache_v.dtype), (0, pos.astype(jnp.int32), 0, 0))
+    # per-row scatter: row b writes its new KV at its own position
+    rows = jnp.arange(b)
+    cache_k = cache_k.at[rows, pos_b].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, pos_b].set(v[:, 0].astype(cache_v.dtype))
     qg = _grouped(q, nkv)  # (B, 1, n_kv, g, hd)
     s_max = cache_k.shape[1]
     kv_pos = jnp.arange(s_max)
-    valid = kv_pos <= pos
+    valid = kv_pos[None, :] <= pos_b[:, None]  # (B, S_max)
     if window is not None:
-        valid = valid & (kv_pos > pos - window)
+        valid = valid & (kv_pos[None, :] > pos_b[:, None] - window)
     scale = 1.0 / np.sqrt(hd)
     if cache_k.dtype == jnp.int8:
         # §Perf-C3: int8 KV cache.  Decode is KV-bandwidth-bound, so halving
@@ -277,7 +280,7 @@ def decode_step(params: dict, x: Array, cfg: ModelConfig,
         # dims: (b, n_kv, 1(s), g, t) → (b, n_kv, g, s, t)
         logits = logits.transpose(0, 1, 3, 2, 4).astype(jnp.float32)
         logits = logits * (sq.transpose(0, 2, 3, 1, 4) * KV_INT8_SCALE * scale)
-        logits = jnp.where(valid[None, None, None, None], logits, NEG_INF)
+        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
         w = jax.nn.softmax(logits, axis=-1)
         w_i8 = jnp.clip(jnp.round(w * 127.0), 0, 127).astype(jnp.int8)
         out = jax.lax.dot_general(
@@ -293,7 +296,7 @@ def decode_step(params: dict, x: Array, cfg: ModelConfig,
         # materialise a full f32 copy in HBM.
         logits = jnp.einsum("bsngh,btnh->bngst", qg, cache_k,
                             preferred_element_type=jnp.float32) * scale
-        logits = jnp.where(valid[None, None, None, None], logits, NEG_INF)
+        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
         w = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bngst,btnh->bsngh", w.astype(cache_v.dtype),
                          cache_v, preferred_element_type=jnp.float32)

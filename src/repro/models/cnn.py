@@ -86,13 +86,22 @@ def mlp_to_amm(params: dict, cfg: MLPConfig, calib_x: np.ndarray,
                quantize_int8: bool = False,
                retrain_steps: int = 0) -> LM.AMMChain:
     """Replace every matmul with a pruned LUT-MU chain (paper Fig. 10);
-    ``retrain_steps`` applies the paper's layer-wise accuracy recovery."""
+    ``retrain_steps`` applies the paper's layer-wise accuracy recovery.
+
+    Thin wrapper over the offline compiler (``repro.compiler``), which owns
+    calibration + pruning + quantisation; use ``compile_chain(..., out=dir)``
+    directly to also persist the servable artifact.
+    """
+    from repro.compiler import compile_chain  # compiler sits above models
+
     n_layers = len(cfg.sizes) - 1
     weights = [np.asarray(params[f"w{i}"]) for i in range(n_layers)]
     biases = [np.asarray(params[f"b{i}"]) for i in range(n_layers)]
-    chain = LM.fit_amm_chain(
-        calib_x, weights, biases, list(num_codebooks), list(depths),
-        activations=["relu"] * (n_layers - 1), quantize_int8=quantize_int8)
+    chain = compile_chain(
+        weights, biases, calib_x,
+        num_codebooks=list(num_codebooks), depths=list(depths),
+        activations=["relu"] * (n_layers - 1),
+        resolution="int8" if quantize_int8 else "float32").chain
     if retrain_steps:
         chain = LM.retrain_chain(chain, weights, biases, calib_x,
                                  steps=retrain_steps)

@@ -149,7 +149,8 @@ def window_flags(cfg: ModelConfig) -> Array:
 
 
 def _block_apply(cfg: ModelConfig, lp: dict, h: Array, positions: Array,
-                 window, constrain: Constrain, layer_idx: int) -> Array:
+                 window, constrain: Constrain, layer_idx: int,
+                 mlp_tap=None) -> Array:
     if "mamba" in lp:
         h = h + MB.mamba_forward(
             lp["mamba"], L.rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
@@ -164,6 +165,8 @@ def _block_apply(cfg: ModelConfig, lp: dict, h: Array, positions: Array,
     if "ln_cross" in lp:
         return h  # cross-attention handled by the enc-dec wrapper
     mlp_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if mlp_tap is not None:
+        mlp_tap(layer_idx, mlp_in)
     if "moe" in lp:
         out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
     elif "amm_mlp" in lp:
@@ -189,6 +192,38 @@ def _run_uniform_stack(cfg: ModelConfig, layers: dict, h: Array,
         body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
     h, _ = jax.lax.scan(body, h, (layers, windows))
     return h
+
+
+def capture_mlp_inputs(params: dict, tokens: Array, cfg: ModelConfig, *,
+                       compute_dtype=jnp.float32) -> list:
+    """Run the forward pass unrolled, recording each layer's MLP input.
+
+    The offline compiler's calibration hook: the returned ``(B·S, D)``
+    activations (one per layer, in layer order) are exactly what the
+    serving-time AMM-MLP substitution will see as its input distribution.
+    Uniform (non-hybrid, non-enc-dec) attention stacks only — the families
+    the AMM-MLP substitution targets.
+    """
+    if cfg.is_hybrid or cfg.is_encdec or cfg.family == "ssm":
+        raise ValueError(
+            f"MLP-input capture supports uniform attention stacks, "
+            f"not family {cfg.family!r}")
+    cd = compute_dtype
+    b, s = tokens.shape
+    h = params["embed"].astype(cd)[tokens]
+    windows = window_flags(cfg)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    captured: list = []
+
+    def tap(layer_idx, mlp_in):
+        del layer_idx  # python-unrolled: append order is layer order
+        captured.append(mlp_in.reshape(-1, cfg.d_model))
+
+    for l in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[l], params["layers"])
+        h = _block_apply(cfg, lp, h, positions, windows[l], _id, l,
+                         mlp_tap=tap)
+    return captured
 
 
 def _run_hybrid_stack(cfg: ModelConfig, layers: dict, h: Array,
@@ -359,7 +394,9 @@ def decode_step(params: dict, token: Array, pos: Array, cache: dict,
                 compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
     """One decode step for every architecture family.
 
-    token: (B, 1) int32; pos: scalar int32 (tokens so far).
+    token: (B, 1) int32; pos: scalar int32, or a (B,) vector of per-row
+    positions (tokens so far) so continuous-batching slots admitted at
+    different times decode at their own offsets.
     Returns (logits (B, 1, V) f32, updated cache).
     """
     cd = compute_dtype
@@ -419,10 +456,10 @@ def decode_step(params: dict, token: Array, pos: Array, cache: dict,
         h, new_cache = jax.lax.scan(body, hh, (groups, cache))
 
     elif cfg.is_encdec:
-        # learned decoder positional embedding at this position
-        pe = jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], pos.astype(jnp.int32), 1, axis=0)
-        h = h + pe[None].astype(cd)
+        # learned decoder positional embedding at each row's position
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        pe = jnp.take(params["pos_embed"], pos_b, axis=0)[:, None]
+        h = h + pe.astype(cd)
 
         def body(carry, xs):
             hh = carry

@@ -55,14 +55,48 @@ class ServeEngine:
         self._uid = itertools.count()
 
         def _decode(params, token, pos_vec, cache):
-            # per-slot positions: decode each slot at its own offset.  We use
-            # the max position for the shared scalar and mask via the KV
-            # cache contents (positions beyond a slot's pos hold zeros).
+            # pos_vec: (slots,) — each slot decodes at its own offset, so
+            # staggered admissions stay bit-identical to sequential decode.
             logits, cache = MD.decode_step(
                 params, token, pos_vec, cache, cfg, compute_dtype=compute_dtype)
             return logits, cache
 
         self._decode = jax.jit(_decode, donate_argnums=(3,))
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_artifact(cls, artifact_path, params, cfg: ModelConfig,
+                      **kwargs) -> "ServeEngine":
+        """Serve a compiled ``amm_lm`` artifact: splice its LUT-MU tables
+        into ``params`` (replacing the dense MLPs) and enable the AMM path
+        with the artifact's recorded settings.
+
+        ``params`` is the dense-model params tree the artifact was compiled
+        against (e.g. a restored checkpoint); the arch name must match.
+        """
+        from repro.compiler.artifact import ArtifactError, load_artifact
+
+        art = load_artifact(artifact_path)
+        if art.kind != "amm_lm":
+            raise ArtifactError(
+                f"ServeEngine needs an amm_lm artifact, got {art.kind!r}")
+        if art.manifest.get("arch") != cfg.name:
+            raise ArtifactError(
+                f"artifact was compiled for arch {art.manifest.get('arch')!r}"
+                f", engine config is {cfg.name!r}")
+        # arch name alone doesn't pin geometry (reduced configs share it)
+        if art.manifest.get("num_layers") != cfg.num_layers:
+            raise ArtifactError(
+                f"artifact has {art.manifest.get('num_layers')} layers, "
+                f"config expects {cfg.num_layers} (reduced vs full?)")
+        d_out = art.tensors["layer0/lut_down"].shape[-1]
+        if d_out != cfg.d_model:
+            raise ArtifactError(
+                f"artifact d_model {d_out} != config d_model {cfg.d_model}")
+        cfg = dataclasses.replace(
+            cfg, amm=dataclasses.replace(cfg.amm, enabled=True,
+                                         **art.manifest["amm"]))
+        return cls(art.splice_lm_params(params), cfg, **kwargs)
 
     # -- API -------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -101,13 +135,9 @@ class ServeEngine:
         token = np.zeros((self.slots, 1), dtype=np.int32)
         for slot, req in self.active.items():
             token[slot, 0] = req.generated[-1] if req.generated else 0
-        # synchronized decode position = max over active slots (cache rows
-        # of shorter slots are zero-padded; correctness is per-slot because
-        # attention masks on position <= pos)
-        pos = int(self.pos[[s for s in self.active]].max())
         logits, self.cache = self._decode(
-            self.params, jnp.asarray(token), jnp.asarray(pos, jnp.int32),
-            self.cache)
+            self.params, jnp.asarray(token),
+            jnp.asarray(self.pos, jnp.int32), self.cache)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         finished = []
         for slot, req in list(self.active.items()):

@@ -13,14 +13,25 @@ import pytest
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
+def _abstract_mesh_16x16():
+    """AbstractMesh across jax versions: ≤0.4.x takes ((name, size), ...)
+    pairs; newer jax takes (sizes, names)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh((("data", 16), ("model", 16)))
+    except TypeError:
+        return AbstractMesh((16, 16), ("data", "model"))
+
+
 def test_sharding_rules_unit():
     """Rule engine: spec shapes + divisibility guards (pure metadata — uses
     an abstract 16x16 mesh, no devices needed)."""
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.configs import get_config
     from repro.distributed.sharding import MeshAxes, _guarded_spec, _rules
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = _abstract_mesh_16x16()
     axes = MeshAxes.for_mesh(mesh)
     # divisible dims shard
     spec = _guarded_spec((5120, 27648), ("fsdp", "tp"), mesh, axes)
@@ -36,11 +47,10 @@ def test_sharding_rules_unit():
 
 
 def test_expert_parallel_choice():
-    from jax.sharding import AbstractMesh
     from repro.configs import get_config
     from repro.distributed.sharding import MeshAxes, use_expert_parallel
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = _abstract_mesh_16x16()
     axes = MeshAxes.for_mesh(mesh)
     assert use_expert_parallel(get_config("qwen3-moe-30b-a3b"), mesh, axes)
     assert use_expert_parallel(get_config("jamba-1.5-large-398b"), mesh, axes)
