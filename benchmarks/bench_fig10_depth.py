@@ -1,8 +1,6 @@
 """Paper Fig. 10: accuracy vs MLP depth for different first-layer LUT
 configurations (higher first-layer resolution ⇒ higher, slower-degrading
 accuracy with depth)."""
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.data import synthetic_mnist

@@ -9,7 +9,6 @@ not guessed.  On CPU the Pallas backends run in interpret mode (correctness
 cost model only); run on TPU for real numbers.
 """
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, random_lutmu_params, sweep_backends
 from repro.core.maddness import HashTree

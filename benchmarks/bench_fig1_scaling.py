@@ -5,7 +5,6 @@ Workload = online ops per input row; footprint = parameter bytes.  Matches
 the paper's qualitative claim: LUT methods cut workload by ~d_sub/I per
 output but pay a footprint premium that pruning halves.
 """
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core.pruning import pruned_param_bytes, workload_ops

@@ -8,7 +8,6 @@ narrow ResNet-9) — the *relative* orderings are the reproduced claims:
   * pruned accuracy ≈ kn2col accuracy (pruning is lossless).
 """
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.data import synthetic_cifar

@@ -1,0 +1,83 @@
+"""Serving throughput: tokens/s vs slots x mesh shape.
+
+Drives the continuous-batching ``ServeEngine`` on a tiny reduced config and
+sweeps the decode-slot count against every mesh shape that fits the host
+device count (fake devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise the
+sharded shapes — the CI ``bench-smoke`` job does).  Emitted per cell:
+``us`` = µs per generated token, ``derived`` = tokens/s plus the request
+mix, seeding the trajectory for the paper's "constrained resource growth
+as problem size rises" serving claim.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve_throughput
+"""
+import dataclasses
+import time
+
+import jax
+
+from benchmarks.common import emit
+
+SLOTS = (1, 2, 4)
+MESH_SHAPES = ((1, 2), (2, 1), (2, 2), (2, 4))
+
+
+def _tiny_cfg():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-14b", reduced=True)
+    return dataclasses.replace(
+        cfg,
+        num_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab_size=128,
+        num_heads=2,
+        num_kv_heads=1,
+        head_dim=32,
+    )
+
+
+def _drain(engine, prompts, max_new):
+    for p in prompts:
+        engine.submit(p, max_new_tokens=max_new)
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.generated) for r in done)
+    return n_tok, dt
+
+
+def run(requests: int = 6, max_new: int = 8) -> None:
+    from repro.models import model as MD
+    from repro.serving import ServeEngine
+
+    cfg = _tiny_cfg()
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [
+        [(7 * i + j) % cfg.vocab_size for j in range(4)] for i in range(requests)
+    ]
+
+    n_dev = len(jax.devices())
+    meshes = [None] + [
+        jax.make_mesh((d, m), ("data", "model"))
+        for d, m in MESH_SHAPES
+        if d * m <= n_dev
+    ]
+    for mesh in meshes:
+        tag = "1x1" if mesh is None else f"{mesh.shape['data']}x{mesh.shape['model']}"
+        for slots in SLOTS:
+            engine = ServeEngine(params, cfg, slots=slots, max_len=64, mesh=mesh)
+            # first drain warms the jitted prefill/decode, second is timed
+            _drain(engine, prompts[:1], 2)
+            n_tok, dt = _drain(engine, prompts, max_new)
+            tok_s = n_tok / max(dt, 1e-9)
+            emit(
+                f"serve/mesh{tag}/slots{slots}",
+                dt / max(n_tok, 1) * 1e6,
+                f"tok_s={tok_s:.1f};requests={requests};max_new={max_new}",
+            )
+
+
+if __name__ == "__main__":
+    run()

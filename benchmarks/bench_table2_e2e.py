@@ -3,7 +3,6 @@ roofline-derived GOPS for our cells (the FPGA GOPS/W axis has no TPU twin —
 we report equivalent-complexity throughput at the roofline bound, per cell),
 plus the paper models' complexity accounting.
 """
-import json
 from pathlib import Path
 
 from benchmarks.common import emit

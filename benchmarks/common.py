@@ -9,6 +9,16 @@ import jax
 import numpy as np
 
 
+# Machine-readable record sink: every ``emit`` appends here, and
+# ``benchmarks/run.py --json`` serialises it (with the failure list) for CI
+# trajectory tracking.  Reset per harness invocation via ``reset_records``.
+RECORDS: list = []
+
+
+def reset_records() -> None:
+    RECORDS.clear()
+
+
 def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-time per call in µs (after jit warmup)."""
     for _ in range(warmup):
@@ -24,6 +34,8 @@ def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    RECORDS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
 
 

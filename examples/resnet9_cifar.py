@@ -7,7 +7,6 @@ and compare accuracy + footprint.
 Run:  PYTHONPATH=src python examples/resnet9_cifar.py
 """
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data import synthetic_cifar
 from repro.models import cnn

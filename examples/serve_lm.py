@@ -13,7 +13,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data import TokenStream
-from repro.models import model as MD
 from repro.models.amm_mlp import fit_from_dense
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.serving import ServeEngine

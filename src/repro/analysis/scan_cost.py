@@ -18,8 +18,7 @@ multiply-add) is ≤1e-4 of a block and is ignored (documented).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

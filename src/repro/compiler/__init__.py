@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from pathlib import Path
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import numpy as np
@@ -193,6 +193,7 @@ def compile_lm_amm(
     *,
     name: Optional[str] = None,
     out: Optional[str] = None,
+    mesh_shape: Optional[dict] = None,
     seed: int = 0,
 ) -> CompileResult:
     """Compile a trained LM's MLP blocks into an ``amm_lm`` artifact.
@@ -202,6 +203,11 @@ def compile_lm_amm(
     pruned to the down-encode's split dims per ``cfg.amm``), and packs
     them.  Load side: ``ServeEngine.from_artifact`` /
     ``Artifact.splice_lm_params``.
+
+    ``mesh_shape`` (e.g. ``{"data": 2, "model": 4}``) records the serving
+    mesh the artifact is intended for — ``launch/serve.py --mesh auto``
+    reads it back; the engine only warns on mismatch since the sharding
+    rules re-derive placement for any mesh.
     """
     fitted = calibrate_lm_mlp_layers(params, cfg, tokens, seed=seed)
     tensors = {}
@@ -226,6 +232,8 @@ def compile_lm_amm(
                 "quantize_int8": a.quantize_int8, "backend": a.backend},
         "resource_report": {"lut_bytes": int(lut_bytes)},
     }
+    if mesh_shape is not None:
+        manifest["mesh"] = {k: int(v) for k, v in mesh_shape.items()}
     art = Artifact(manifest=manifest, tensors=tensors)
     path = save_artifact(out, art) if out is not None else None
     return CompileResult(artifact=art, chain=None, path=path,

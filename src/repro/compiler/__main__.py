@@ -103,8 +103,18 @@ def cmd_lm(args) -> int:
     ts = TokenStream(vocab_size=cfg.vocab_size, batch_size=args.calib_batch,
                      seq_len=args.calib_seq)
     tokens = np.asarray(ts.batch(0)["tokens"])
+    mesh_shape = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_spec
+        try:
+            data, model = parse_mesh_spec(args.mesh)
+        except ValueError as e:
+            print(f"--mesh: {e}", file=sys.stderr)
+            return 2
+        mesh_shape = {"data": data, "model": model}
     print(f"[compiler] capturing MLP inputs for {cfg.num_layers} layers…")
-    result = compile_lm_amm(params, cfg, tokens, out=args.out)
+    result = compile_lm_amm(params, cfg, tokens, out=args.out,
+                            mesh_shape=mesh_shape)
     print(f"[compiler] amm_lm artifact: {result.report['lut_bytes']} LUT "
           f"bytes → {result.path or '(not saved)'}")
     return 0
@@ -168,6 +178,9 @@ def main(argv=None) -> int:
     lm.add_argument("--calib-batch", type=int, default=8)
     lm.add_argument("--calib-seq", type=int, default=32)
     lm.add_argument("--float-luts", action="store_true")
+    lm.add_argument("--mesh",
+                    help="intended serving mesh 'DxM' (data x model), "
+                         "recorded in the manifest for --mesh auto serving")
     lm.add_argument("--out")
     lm.set_defaults(fn=cmd_lm)
 

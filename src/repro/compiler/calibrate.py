@@ -17,7 +17,7 @@ the closed-form optimum of the layer-wise LUT-retraining objective.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

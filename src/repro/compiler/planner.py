@@ -24,8 +24,6 @@ import dataclasses
 from typing import List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.compiler.calibrate import LayerCalibration
 from repro.compiler.quantize import ResolutionConfig

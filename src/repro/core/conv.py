@@ -18,7 +18,6 @@ from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 

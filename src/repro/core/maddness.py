@@ -22,7 +22,6 @@ online path is pure jnp and jit-friendly.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

@@ -2,8 +2,10 @@
 
 Policy (MaxText-style, adapted per family — see DESIGN.md §5):
 
-  * ``model`` axis = tensor parallelism over feature dims (flat head dims so
-    non-divisible head *counts* — qwen's 40 heads on 16 — still shard);
+  * ``model`` axis = tensor parallelism over feature dims; attention
+    projections shard only when the head count divides the axis (whole
+    heads per shard — a split ``hd`` miscompiles per-head ops under the
+    SPMD partitioner inside scanned stacks), others fall back to FSDP;
   * ``data`` (+ ``pod``) axes = data parallel for activations and ZeRO/FSDP
     for params + optimizer state;
   * MoE experts: expert-parallel over ``model`` when E divides it, else
@@ -54,19 +56,31 @@ class MeshAxes:
 _Rule = Tuple[str, Tuple[Optional[str], ...]]
 
 
-def _rules(cfg: ModelConfig, ep: bool) -> Sequence[_Rule]:
+def _rules(cfg: ModelConfig, ep: bool, tp_size: int = 1) -> Sequence[_Rule]:
     moe_up = ("tp", "fsdp", None) if ep else (None, "fsdp", "tp")
     moe_down = ("tp", None, "fsdp") if ep else (None, "tp", "fsdp")
+    # Attention projections TP-shard only when the head *count* divides the
+    # axis, so every shard holds whole heads.  Sharding the flat (H·hd) dim
+    # regardless (the previous policy) leaves ``hd`` itself sharded when
+    # heads don't divide, and per-head ops inside a scanned layer stack
+    # (rope rotation, qk-norm) then miscompile under the SPMD partitioner —
+    # wrong values, caught by the sharded-vs-single-device serving parity
+    # test.  Non-dividing head counts fall back to FSDP-only.
+    q_tp = "tp" if cfg.num_heads % max(tp_size, 1) == 0 else None
+    kv_tp = "tp" if cfg.num_kv_heads % max(tp_size, 1) == 0 else None
     return [
         (r"embed$", ("tp", "fsdp")),
         (r"lm_head$", ("fsdp", "tp")),
         (r"pos_embed$", (None, "fsdp")),
-        # attention (flat head dims)
-        (r"attn/w[qkv]$", ("fsdp", "tp")),
-        (r"attn/wo$", ("tp", "fsdp")),
-        (r"attn/b[qkv]$", ("tp",)),
-        (r"cross/w[qkv]$", ("fsdp", "tp")),
-        (r"cross/wo$", ("tp", "fsdp")),
+        # attention (flat head dims, head-aligned TP)
+        (r"attn/wq$", ("fsdp", q_tp)),
+        (r"attn/w[kv]$", ("fsdp", kv_tp)),
+        (r"attn/wo$", (q_tp, "fsdp")),
+        (r"attn/bq$", (q_tp,)),
+        (r"attn/b[kv]$", (kv_tp,)),
+        (r"cross/wq$", ("fsdp", q_tp)),
+        (r"cross/w[kv]$", ("fsdp", kv_tp)),
+        (r"cross/wo$", (q_tp, "fsdp")),
         # dense MLP
         (r"mlp/w_(gate|up)$", ("fsdp", "tp")),
         (r"mlp/w_down$", ("tp", "fsdp")),
@@ -137,7 +151,7 @@ def param_shardings(params_shape, cfg: ModelConfig, mesh: Mesh):
     """Map a params shape-pytree → NamedSharding pytree by rule matching."""
     axes = MeshAxes.for_mesh(mesh)
     ep = use_expert_parallel(cfg, mesh, axes)
-    rules = _rules(cfg, ep)
+    rules = _rules(cfg, ep, axes.tp_size(mesh))
 
     def assign(path, leaf):
         pstr = _leaf_path(path)

@@ -155,6 +155,15 @@ def _run_fused(xs: Array, params: MaddnessParams, tiles: AT.TileConfig,
     )
 
 
+def _run_backend(xs: Array, params: MaddnessParams, backend: str,
+                 tiles: Optional[AT.TileConfig], interpret: bool) -> Array:
+    if backend == "ref":
+        return _run_ref(xs, params)
+    if backend == "unfused":
+        return _run_unfused(xs, params, tiles, interpret)
+    return _run_fused(xs, params, tiles, interpret)
+
+
 def lutmu_matmul(
     x: Array,
     params: MaddnessParams,
@@ -202,13 +211,100 @@ def lutmu_matmul(
         raise ValueError(f"backend must be 'auto' or one of {BACKENDS}, "
                          f"got {backend!r}")
 
-    if backend == "ref":
-        return _run_ref(xs, params)
-    if tiles is None:
+    if backend != "ref" and tiles is None:
         tiles = AT.get_tiles(
             b, c, n, depth, params.lut.dtype, backend=backend,
             allow_measure=autotune, interpret=interpret, cache=cache,
         )
-    if backend == "unfused":
-        return _run_unfused(xs, params, tiles, interpret)
-    return _run_fused(xs, params, tiles, interpret)
+    return _run_backend(xs, params, backend, tiles, interpret)
+
+
+def lutmu_matmul_sharded(
+    x: Array,
+    params: MaddnessParams,
+    *,
+    mesh,
+    axis: str = "model",
+    backend: str = "auto",
+    input_kind: str = "full",
+    tiles: Optional[AT.TileConfig] = None,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Codebook-sharded LUT-MU: per-shard aggregate + psum, no gathers.
+
+    The TP-sharded twin of :func:`lutmu_matmul` for serving under a mesh
+    (``distributed/sharding.py`` shards LUT tables over the codebook axis on
+    ``axis``).  Each device runs the chosen backend over its *local*
+    codebooks only — encode reads local split values/thresholds, the
+    aggregate contracts the local LUT shard — then the pre-epilogue partial
+    outputs are ``psum``-reduced over ``axis`` and the dequant epilogue
+    (scale/offset, which fold per-codebook terms of the *full* table) is
+    applied once on the replicated result.  The LUT never leaves its shard.
+
+    Integer LUTs stay bit-identical to the unsharded path: per-shard int32
+    partials are exact in float32 (< 2**24), so the psum and the single
+    epilogue reproduce ``contract_onehot`` arithmetic exactly.  Float LUTs
+    reassociate the codebook sum across shards (≈1e-6 relative).
+
+    Falls back to :func:`lutmu_matmul` when ``axis`` has size 1 or the
+    codebook count does not divide by it (the sharding rules replicate such
+    tables anyway).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if interpret is None:
+        interpret = default_interpret()
+    xs = _to_split_values(x, params, input_kind)
+    b, c, depth = xs.shape
+    n = params.lut.shape[-1]
+    tp = int(mesh.shape[axis])
+    if tp <= 1 or c % tp != 0:
+        return lutmu_matmul(xs, params, backend=backend, input_kind="split",
+                            tiles=tiles, interpret=interpret)
+    c_local = c // tp
+
+    # batch rows stay sharded over the data-parallel axes when they divide
+    # (the psum runs only over the TP axis), so DP devices never gather or
+    # recompute each other's rows.
+    dp_axes = tuple(n_ for n_ in mesh.axis_names if n_ != axis)
+    dp_size = math.prod(mesh.shape[n_] for n_ in dp_axes) if dp_axes else 1
+    batch_ax = None
+    b_local = b
+    if dp_axes and dp_size > 1 and b % dp_size == 0:
+        batch_ax = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        b_local = b // dp_size
+
+    # backend/tile choices see the *per-shard* problem — that is the shape
+    # the kernel actually executes (and the autotune-cache key).
+    if backend == "auto":
+        backend = os.environ.get("REPRO_LUTMU_BACKEND", "auto")
+    if backend == "auto":
+        backend = select_backend(b_local, c_local, n, depth, params.lut.dtype,
+                                 tiles=tiles)
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be 'auto' or one of {BACKENDS}, "
+                         f"got {backend!r}")
+    if backend != "ref" and tiles is None:
+        tiles = AT.get_tiles(b_local, c_local, n, depth, params.lut.dtype,
+                             backend=backend, interpret=interpret)
+
+    def local_shard(xs_l, split_dims_l, thresholds_l, lut_l):
+        # unit scale / zero offset: the epilogue runs once, after the psum
+        p_l = params_from_arrays(split_dims_l, thresholds_l, lut_l,
+                                 jnp.ones((), jnp.float32),
+                                 jnp.zeros((), jnp.float32))
+        acc = _run_backend(xs_l, p_l, backend, tiles, interpret)
+        return jax.lax.psum(acc, axis)
+
+    # check_rep=False: shard_map's replication checker has no rule for
+    # pallas_call, so the fused/unfused backends would fail at trace time;
+    # the psum + out_specs make replication over ``axis`` explicit anyway.
+    out = shard_map(
+        local_shard, mesh=mesh,
+        in_specs=(P(batch_ax, axis, None), P(axis, None), P(axis, None),
+                  P(axis, None, None)),
+        out_specs=P(batch_ax),
+        check_rep=False,
+    )(xs, params.tree.split_dims, params.tree.thresholds, params.lut)
+    return out * params.lut_scale + params.lut_offset

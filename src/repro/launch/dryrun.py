@@ -28,7 +28,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 from pathlib import Path
@@ -45,7 +44,7 @@ from repro.distributed.sharding import (batch_spec, cache_shardings,
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, ShapeCell, cell_is_applicable, input_specs
 from repro.models import model as MD
-from repro.optim import adamw_init, cosine_schedule
+from repro.optim import cosine_schedule
 from repro.runtime.steps import (TrainState, init_train_state,
                                  make_decode_step, make_prefill_step,
                                  make_train_step)

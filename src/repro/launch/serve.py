@@ -7,6 +7,11 @@ run through the paper's LUT-MU path.
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
       --requests 6 --max-new 12
+
+  # sharded serving on a faked 2x2 host mesh (data x model)
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
+      --requests 3 --mesh 2x2
 """
 from __future__ import annotations
 
@@ -16,12 +21,42 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data import TokenStream
+from repro.launch.mesh import make_serve_mesh
 from repro.models import model as MD
 from repro.serving import ServeEngine
+
+
+def _resolve_mesh(args):
+    """``--mesh DxM`` → mesh; ``--mesh auto`` reads the artifact manifest."""
+    if not args.mesh:
+        return None
+    if args.mesh != "auto":
+        return make_serve_mesh(args.mesh)
+    if not args.artifact:
+        raise SystemExit("--mesh auto needs --artifact (the manifest records "
+                         "the intended mesh)")
+    from repro.compiler.artifact import ArtifactError, load_artifact
+    try:
+        manifest = load_artifact(args.artifact).manifest
+    except (ArtifactError, OSError) as e:
+        raise SystemExit(f"--mesh auto: cannot load artifact "
+                         f"{args.artifact!r}: {e}")
+    want = manifest.get("mesh")
+    if not want:
+        print("[serve] artifact records no intended mesh; serving unsharded")
+        return None
+    spec = f"{want['data']}x{want['model']}"
+    try:
+        mesh = make_serve_mesh(spec)
+    except ValueError as e:
+        print(f"[serve] artifact-recorded mesh unusable ({e}); "
+              "serving unsharded")
+        return None
+    print(f"[serve] using artifact-recorded mesh {spec}")
+    return mesh
 
 
 def main() -> None:
@@ -42,8 +77,14 @@ def main() -> None:
                     help="amm_lm artifact dir from `python -m repro.compiler "
                          "lm` — serve its compiled LUT-MU tables instead of "
                          "the dense MLPs")
+    ap.add_argument("--mesh",
+                    help="serve sharded on a 'DxM' (data x model) mesh, or "
+                         "'auto' to use the mesh recorded in the --artifact "
+                         "manifest; default: single-device")
     ap.add_argument("--ckpt")
     args = ap.parse_args()
+
+    mesh = _resolve_mesh(args)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.amm:
@@ -65,10 +106,11 @@ def main() -> None:
     if args.artifact:
         engine = ServeEngine.from_artifact(
             args.artifact, params, cfg, slots=args.slots,
-            max_len=args.max_len, compute_dtype=dtype)
+            max_len=args.max_len, compute_dtype=dtype, mesh=mesh)
     else:
         engine = ServeEngine(params, cfg, slots=args.slots,
-                             max_len=args.max_len, compute_dtype=dtype)
+                             max_len=args.max_len, compute_dtype=dtype,
+                             mesh=mesh)
     stream = TokenStream(vocab_size=cfg.vocab_size, batch_size=1, seq_len=16)
     for i in range(args.requests):
         prompt = [int(t) for t in stream.batch(i)["tokens"][0][:8]]

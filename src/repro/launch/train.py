@@ -12,13 +12,12 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data import TokenStream
 from repro.distributed.sharding import make_constrainer
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.runtime.trainer import Trainer, TrainerConfig
 
 

@@ -23,17 +23,14 @@ The params here are plain arrays (stackable for ``lax.scan`` over layers);
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lut_mu as LM
 from repro.core import maddness as M
 from repro.core import pruning as P
 from repro.kernels import dispatch as D
-from repro.models.config import AMMConfig, ModelConfig
+from repro.models.config import ModelConfig
 
 Array = jax.Array
 
@@ -83,17 +80,33 @@ def init_amm_mlp_params(cfg: ModelConfig, key, dtype=jnp.int8) -> dict:
     return out
 
 
-def amm_mlp_apply(params: dict, x: Array, cfg: ModelConfig) -> Array:
+def amm_mlp_apply(params: dict, x: Array, cfg: ModelConfig,
+                  constrain=None) -> Array:
     """(B, S, D) → (B, S, D) through the pruned LUT-MU MLP chain.
 
     Every matmul routes through the unified engine
     (``kernels.dispatch.lutmu_matmul``); ``cfg.amm.backend`` picks the
     backend (default ``"auto"``).  Gate and up share the same tree, so the
     split values are gathered once and handed over as ``input_kind="split"``.
+
+    When ``constrain`` is a mesh-aware hook (``make_constrainer`` attaches
+    ``.mesh``/``.axes``) and the tensor-parallel axis is wider than one
+    device, the matmuls run through ``lutmu_matmul_sharded`` instead: the
+    codebook-sharded LUT tables aggregate per shard and psum partial
+    outputs, so no table is ever gathered.
     """
     b, s, d = x.shape
     a = cfg.amm
     be = a.backend
+    mesh = getattr(constrain, "mesh", None)
+    tp_axis = constrain.axes.tp if mesh is not None else None
+    if mesh is not None and int(mesh.shape[tp_axis]) > 1:
+        def matmul(v, p, kind):
+            return D.lutmu_matmul_sharded(v, p, mesh=mesh, axis=tp_axis,
+                                          backend=be, input_kind=kind)
+    else:
+        def matmul(v, p, kind):
+            return D.lutmu_matmul(v, p, backend=be, input_kind=kind)
     xt = x.reshape(b * s, d)
 
     # --- shared up/gate split-value gather (one tree for both LUTs)
@@ -104,8 +117,8 @@ def amm_mlp_apply(params: dict, x: Array, cfg: ModelConfig) -> Array:
         params["up_split_dims"], params["up_thresholds"], params["lut_up"],
         params["lut_up_scale"], params["lut_up_offset"])
     xs = M.gather_split_values(xt.astype(jnp.float32), gate_p.tree)
-    gate = D.lutmu_matmul(xs, gate_p, backend=be, input_kind="split")
-    up = D.lutmu_matmul(xs, up_p, backend=be, input_kind="split")
+    gate = matmul(xs, gate_p, "split")
+    up = matmul(xs, up_p, "split")
     h = jax.nn.silu(gate) * up  # elementwise — dimension-preserving, prunable
 
     # --- down projection
@@ -115,9 +128,9 @@ def amm_mlp_apply(params: dict, x: Array, cfg: ModelConfig) -> Array:
         params["lut_down_offset"])
     if a.prune:
         # gate/up emitted the cluster-ordered pruned package
-        out = D.lutmu_matmul(h, down_p, backend=be, input_kind="package")
+        out = matmul(h, down_p, "package")
     else:
-        out = D.lutmu_matmul(h, down_p, backend=be, input_kind="full")
+        out = matmul(h, down_p, "full")
     return out.reshape(b, s, d).astype(x.dtype)
 
 

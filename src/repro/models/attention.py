@@ -13,7 +13,6 @@ Design notes:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,8 +6,6 @@ caller's (we cast weights at use sites for mixed precision).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -61,15 +59,27 @@ def rope_frequencies(head_dim: int, theta: float) -> Array:
 
 
 def apply_rope(x: Array, positions: Array, theta: float) -> Array:
-    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    Rotation via a static permutation + full-width cos/sin instead of
+    split/concat halves — bit-identical to the halves form, but never
+    slices ``hd`` at its midpoint, which the SPMD partitioner handles
+    incorrectly when ``hd`` itself ends up sharded inside a scanned layer
+    stack (the sharding rules keep whole heads per shard exactly to avoid
+    that regime; this form stays safe even for hand-sharded params).
+    """
     hd = x.shape[-1]
     freqs = rope_frequencies(hd, theta)  # (hd/2,)
     angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
     cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
     sin = jnp.sin(angles)[..., None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
-    return out.astype(x.dtype)
+    cos = jnp.concatenate([cos, cos], axis=-1)
+    sin = jnp.concatenate([sin, sin], axis=-1)
+    perm = jnp.concatenate([jnp.arange(hd // 2, hd), jnp.arange(0, hd // 2)])
+    sign = jnp.concatenate([-jnp.ones(hd // 2), jnp.ones(hd // 2)])
+    xf = x.astype(jnp.float32)
+    rot = jnp.take(xf, perm, axis=-1) * sign
+    return (xf * cos + rot * sin).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

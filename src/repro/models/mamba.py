@@ -15,7 +15,7 @@ SSM/hybrid archs only.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ One code path covers all 10 assigned architectures:
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -170,7 +169,7 @@ def _block_apply(cfg: ModelConfig, lp: dict, h: Array, positions: Array,
     if "moe" in lp:
         out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
     elif "amm_mlp" in lp:
-        out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+        out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg, constrain)
     else:
         m = lp["mlp"]
         out = L.gated_mlp(mlp_in, m["w_gate"].astype(h.dtype),
@@ -444,7 +443,7 @@ def decode_step(params: dict, token: Array, pos: Array, cache: dict,
                 if "moe" in lp:
                     out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
                 elif "amm_mlp" in lp:
-                    out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+                    out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg, constrain)
                 else:
                     m = lp["mlp"]
                     out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
@@ -504,7 +503,7 @@ def decode_step(params: dict, token: Array, pos: Array, cache: dict,
             if "moe" in lp:
                 out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
             elif "amm_mlp" in lp:
-                out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+                out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg, constrain)
             else:
                 m = lp["mlp"]
                 out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
@@ -605,7 +604,7 @@ def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int, *,
                 if "moe" in lp:
                     out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
                 elif "amm_mlp" in lp:
-                    out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+                    out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg, constrain)
                 else:
                     m = lp["mlp"]
                     out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
@@ -633,7 +632,7 @@ def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int, *,
             if "moe" in lp:
                 out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
             elif "amm_mlp" in lp:
-                out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg)
+                out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg, constrain)
             else:
                 m = lp["mlp"]
                 out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),

@@ -7,7 +7,7 @@ the 512-device production mesh (constraints + NamedSharding in/out specs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,12 @@ A deliberately compact twin of a production scheduler (vLLM-style):
   * the whole KV cache lives in one (L, slots, max_len, …) buffer so decode
     is a single jitted call per step regardless of request mix;
   * with ``cfg.amm.enabled`` the MLPs run through the LUT-MU path — the
-    paper's unit serving real traffic.
+    paper's unit serving real traffic;
+  * with ``mesh=`` the engine is sharded: params, spliced LUT-MU tables and
+    the slot cache are placed via the ``distributed/sharding.py`` rules
+    (tables shard over codebooks on the TP axis, slots over the DP axis)
+    and prefill/decode run as jitted sharded calls with
+    ``NamedSharding``-constrained donations.
 """
 from __future__ import annotations
 
@@ -22,11 +27,18 @@ from typing import Deque, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed.sharding import (batch_spec, cache_shardings,
+                                        make_constrainer, param_shardings)
 from repro.models import model as MD
 from repro.models.config import ModelConfig
 
 Array = jax.Array
+
+
+def _shape_tree(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
 
 
 @dataclasses.dataclass
@@ -42,26 +54,49 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_len: int = 256, compute_dtype=jnp.float32):
-        self.params = params
+                 max_len: int = 256, compute_dtype=jnp.float32, mesh=None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.cd = compute_dtype
+        self.mesh = mesh
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
         self.pos = np.zeros(slots, dtype=np.int64)  # per-slot next position
-        self.cache = MD.init_cache(cfg, slots, max_len, compute_dtype)
         self._uid = itertools.count()
+
+        cache = MD.init_cache(cfg, slots, max_len, compute_dtype)
+        if mesh is None:
+            self._constrain = MD._id
+            self.params = params
+            self.cache = cache
+            jit_kwargs = {}
+        else:
+            # Sharded serving: rule-engine placement for params (LUT tables
+            # TP-shard over codebooks) and the slot cache (slots DP-shard),
+            # then jit with explicit shardings so the donated cache buffer
+            # round-trips in place.
+            self._constrain = make_constrainer(cfg, mesh)
+            p_sh = param_shardings(_shape_tree(params), cfg, mesh)
+            self.params = jax.device_put(params, p_sh)
+            c_sh = cache_shardings(_shape_tree(cache), cfg, mesh, batch=slots)
+            self._cache_sh = c_sh
+            self.cache = jax.device_put(cache, c_sh)
+            tok_sh = NamedSharding(mesh, batch_spec(mesh, slots))
+            rep = NamedSharding(mesh, P())
+            jit_kwargs = {"in_shardings": (p_sh, tok_sh, rep, c_sh),
+                          "out_shardings": (None, c_sh)}
+        constrain = self._constrain
 
         def _decode(params, token, pos_vec, cache):
             # pos_vec: (slots,) — each slot decodes at its own offset, so
             # staggered admissions stay bit-identical to sequential decode.
             logits, cache = MD.decode_step(
-                params, token, pos_vec, cache, cfg, compute_dtype=compute_dtype)
+                params, token, pos_vec, cache, cfg, constrain=constrain,
+                compute_dtype=compute_dtype)
             return logits, cache
 
-        self._decode = jax.jit(_decode, donate_argnums=(3,))
+        self._decode = jax.jit(_decode, donate_argnums=(3,), **jit_kwargs)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -73,6 +108,10 @@ class ServeEngine:
 
         ``params`` is the dense-model params tree the artifact was compiled
         against (e.g. a restored checkpoint); the arch name must match.
+        Pass ``mesh=`` to serve sharded; when the manifest records an
+        intended mesh (``python -m repro.compiler lm --mesh DxM``) a
+        mismatching engine mesh is reported but not rejected — the sharding
+        rules re-derive a valid placement for any mesh.
         """
         from repro.compiler.artifact import ArtifactError, load_artifact
 
@@ -96,6 +135,13 @@ class ServeEngine:
         cfg = dataclasses.replace(
             cfg, amm=dataclasses.replace(cfg.amm, enabled=True,
                                          **art.manifest["amm"]))
+        want = art.manifest.get("mesh")
+        mesh = kwargs.get("mesh")
+        if want and mesh is not None:
+            have = {ax: int(n) for ax, n in mesh.shape.items()}
+            if {k: int(v) for k, v in want.items()} != have:
+                print(f"[serve] note: artifact was compiled for mesh {want}, "
+                      f"serving on {have}")
         return cls(art.splice_lm_params(params), cfg, **kwargs)
 
     # -- API -------------------------------------------------------------
@@ -115,7 +161,7 @@ class ServeEngine:
             tokens = jnp.asarray(req.prompt, jnp.int32)[None]
             logits, cache1 = MD.prefill(
                 self.params, tokens, self.cfg, self.max_len,
-                compute_dtype=self.cd)
+                constrain=self._constrain, compute_dtype=self.cd)
             # splice the single-row cache into this slot
             self.cache = jax.tree.map(
                 lambda full, one: jax.lax.dynamic_update_index_in_dim(
@@ -126,6 +172,11 @@ class ServeEngine:
             req.generated.append(nxt)
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
+        if self.mesh is not None:
+            # the eager splice drifts leaf shardings off the rule-engine
+            # placement; restore it so the sharded decode's explicit
+            # in_shardings (and donation) line up.
+            self.cache = jax.device_put(self.cache, self._cache_sh)
 
     def step(self) -> List[Request]:
         """One engine iteration: admit, batched decode, retire."""

@@ -1,6 +1,5 @@
 """The paper's case-study path: Kn2col/Im2col convolution lowering,
 LUT-MU-substituted MLP (MNIST) and ResNet-9 (CIFAR) at reduced scale."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,7 +3,6 @@ parity per resolution config, corruption/version rejection, and the
 compile → serve wiring."""
 import dataclasses
 import json
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

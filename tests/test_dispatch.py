@@ -1,6 +1,5 @@
 """Unified execution engine tests: backend parity on a shape grid, input-kind
 consistency, the ``auto`` selection rules, and the autotune cache."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

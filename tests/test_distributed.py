@@ -1,13 +1,10 @@
 """Distributed config tests: sharding rules + an 8-device dry-run smoke in a
 subprocess (so this test process keeps its single real CPU device)."""
-import json
 import os
 import subprocess
 import sys
 from pathlib import Path
 
-import jax
-import numpy as np
 import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
@@ -28,8 +25,7 @@ def test_sharding_rules_unit():
     """Rule engine: spec shapes + divisibility guards (pure metadata — uses
     an abstract 16x16 mesh, no devices needed)."""
     from jax.sharding import PartitionSpec as P
-    from repro.configs import get_config
-    from repro.distributed.sharding import MeshAxes, _guarded_spec, _rules
+    from repro.distributed.sharding import MeshAxes, _guarded_spec
 
     mesh = _abstract_mesh_16x16()
     axes = MeshAxes.for_mesh(mesh)

@@ -1,6 +1,5 @@
 """Per-kernel allclose vs the pure-jnp oracles, across shape/dtype sweeps
 (interpret mode executes the kernel bodies on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

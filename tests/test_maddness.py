@@ -1,5 +1,4 @@
 """Unit tests for the MADDNESS core (offline training + online paths)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

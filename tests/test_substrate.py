@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, data pipeline, checkpointing, compression,
 quant, II model."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -9,13 +9,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import lut_mu as LM
 from repro.data import TokenStream, synthetic_mnist
 from repro.models import cnn
-from repro.models import model as MD
 from repro.models.amm_mlp import amm_mlp_apply, fit_from_dense
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.serving import ServeEngine
