@@ -1,15 +1,21 @@
-"""Serving throughput: tokens/s vs slots x mesh shape.
+"""Serving throughput: continuous batching (paged) vs fixed slots.
 
-Drives the continuous-batching ``ServeEngine`` on a tiny reduced config and
-sweeps the decode-slot count against every mesh shape that fits the host
-device count (fake devices with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise the
-sharded shapes — the CI ``bench-smoke`` job does).  Emitted per cell:
+Drives both engines over a **mixed-length** request workload (the regime
+continuous batching exists for) on a tiny reduced config, sweeping the
+decode-batch size and every mesh shape that fits the host device count
+(fake devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+to exercise the sharded cells — the CI jobs do).  Emitted per cell:
 ``us`` = µs per generated token, ``derived`` = tokens/s plus the request
-mix, seeding the trajectory for the paper's "constrained resource growth
-as problem size rises" serving claim.
+mix; plus a ``paged_vs_fixed`` ratio record per batch size — the record
+``benchmarks/check_trajectory.py`` gates on (paged must beat fixed slots).
 
-Run:  PYTHONPATH=src python -m benchmarks.bench_serve_throughput
+The fixed-slot engine re-runs an eager whole-prompt prefill per admission
+(every distinct prompt length is a fresh set of op shapes); the paged
+engine prefils in fixed-width chunks through one compiled program and
+interleaves them with decode — that is where the mixed-length win comes
+from.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only serve_throughput
 """
 import dataclasses
 import time
@@ -18,8 +24,10 @@ import jax
 
 from benchmarks.common import emit
 
-SLOTS = (1, 2, 4)
-MESH_SHAPES = ((1, 2), (2, 1), (2, 2), (2, 4))
+BATCH = (2, 4)
+MESH_SHAPES = ((2, 2),)
+# mixed prompt lengths: short chat turns next to long-context requests
+MIX = (2, 5, 9, 14, 20, 3, 12, 7)
 
 
 def _tiny_cfg():
@@ -38,6 +46,13 @@ def _tiny_cfg():
     )
 
 
+def _prompts(cfg, requests):
+    return [
+        [(7 * i + j) % cfg.vocab_size for j in range(MIX[i % len(MIX)])]
+        for i in range(requests)
+    ]
+
+
 def _drain(engine, prompts, max_new):
     for p in prompts:
         engine.submit(p, max_new_tokens=max_new)
@@ -48,15 +63,28 @@ def _drain(engine, prompts, max_new):
     return n_tok, dt
 
 
-def run(requests: int = 6, max_new: int = 8) -> None:
+def _build(kind, params, cfg, batch, mesh):
+    from repro.serving import FixedSlotEngine, ServeEngine
+
+    if kind == "fixed":
+        return FixedSlotEngine(params, cfg, slots=batch, max_len=64, mesh=mesh)
+    return ServeEngine(
+        params,
+        cfg,
+        max_batch=batch,
+        max_len=64,
+        page_size=16,
+        prefill_chunk=8,
+        mesh=mesh,
+    )
+
+
+def run(requests: int = 8, max_new: int = 8) -> None:
     from repro.models import model as MD
-    from repro.serving import ServeEngine
 
     cfg = _tiny_cfg()
     params = MD.init_params(cfg, jax.random.PRNGKey(0))
-    prompts = [
-        [(7 * i + j) % cfg.vocab_size for j in range(4)] for i in range(requests)
-    ]
+    prompts = _prompts(cfg, requests)
 
     n_dev = len(jax.devices())
     meshes = [None] + [
@@ -66,16 +94,27 @@ def run(requests: int = 6, max_new: int = 8) -> None:
     ]
     for mesh in meshes:
         tag = "1x1" if mesh is None else f"{mesh.shape['data']}x{mesh.shape['model']}"
-        for slots in SLOTS:
-            engine = ServeEngine(params, cfg, slots=slots, max_len=64, mesh=mesh)
-            # first drain warms the jitted prefill/decode, second is timed
-            _drain(engine, prompts[:1], 2)
-            n_tok, dt = _drain(engine, prompts, max_new)
-            tok_s = n_tok / max(dt, 1e-9)
+        for batch in BATCH:
+            tok_s = {}
+            for kind in ("fixed", "paged"):
+                engine = _build(kind, params, cfg, batch, mesh)
+                # first drain warms the compiled prefill/decode, second is
+                # timed — same mixed workload for both engines
+                _drain(engine, prompts[:1], 2)
+                n_tok, dt = _drain(engine, prompts, max_new)
+                tok_s[kind] = n_tok / max(dt, 1e-9)
+                emit(
+                    f"serve/mesh{tag}/{kind}/batch{batch}",
+                    dt / max(n_tok, 1) * 1e6,
+                    f"tok_s={tok_s[kind]:.1f};requests={requests};"
+                    f"max_new={max_new};mix={'-'.join(map(str, MIX))}",
+                )
             emit(
-                f"serve/mesh{tag}/slots{slots}",
-                dt / max(n_tok, 1) * 1e6,
-                f"tok_s={tok_s:.1f};requests={requests};max_new={max_new}",
+                f"serve/mesh{tag}/paged_vs_fixed/batch{batch}",
+                0.0,
+                f"ratio={tok_s['paged'] / max(tok_s['fixed'], 1e-9):.2f};"
+                f"paged_tok_s={tok_s['paged']:.1f};"
+                f"fixed_tok_s={tok_s['fixed']:.1f}",
             )
 
 

@@ -1,0 +1,87 @@
+"""Gate a fresh ``benchmarks/run.py --json`` output against the committed
+perf trajectory (``BENCH_PR4.json`` at the repo root).
+
+Checks, in order:
+
+  1. the new run is ``ok`` (no benchmark module failed);
+  2. **coverage** — every record name in the baseline appears in the new
+     run (a refactor cannot silently drop a measured cell);
+  3. **the serving claim** — every ``serve/.../paged_vs_fixed/...`` record
+     in the new run shows the continuous-batching engine at or above
+     ``--min-ratio`` × the fixed-slot engine's tokens/s (default 1.0:
+     paged must not lose to fixed slots on the mixed-length workload).
+
+Absolute µs numbers are *not* compared — CI machines vary too much; the
+trajectory tracks structure and engine-vs-engine ordering, which are
+machine-independent.
+
+Usage::
+
+    python benchmarks/check_trajectory.py \
+        --baseline BENCH_PR4.json --new /tmp/bench_new.json
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def check(baseline: dict, new: dict, min_ratio: float) -> list:
+    errors = []
+    if not new.get("ok", False):
+        errors.append(f"new run not ok: failed={new.get('failed')} "
+                      f"errors={new.get('errors')}")
+    base_names = {r["name"] for r in baseline.get("records", [])}
+    new_names = {r["name"] for r in new.get("records", [])}
+    missing = sorted(base_names - new_names)
+    if missing:
+        errors.append(f"records dropped vs baseline: {missing}")
+    ratio_recs = [r for r in new.get("records", [])
+                  if "/paged_vs_fixed/" in r["name"]]
+    if not ratio_recs:
+        errors.append("no paged_vs_fixed records in the new run")
+    for rec in ratio_recs:
+        ratio = _parse_derived(rec["derived"]).get("ratio")
+        if ratio is None:
+            errors.append(f"{rec['name']}: no ratio in derived")
+        elif ratio < min_ratio:
+            errors.append(
+                f"{rec['name']}: continuous batching at {ratio:.2f}x fixed "
+                f"slots (< required {min_ratio:.2f}x)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--new", required=True)
+    ap.add_argument("--min-ratio", type=float, default=1.0,
+                    help="required paged/fixed tokens-per-second ratio")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    new = json.loads(Path(args.new).read_text())
+    errors = check(baseline, new, args.min_ratio)
+    if errors:
+        for e in errors:
+            print(f"[trajectory] FAIL: {e}", file=sys.stderr)
+        return 1
+    n = len(new.get("records", []))
+    print(f"[trajectory] OK: {n} records, coverage and paged>fixed hold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

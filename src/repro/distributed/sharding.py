@@ -233,6 +233,37 @@ def cache_shardings(cache_shape, cfg: ModelConfig, mesh: Mesh, batch: int):
     return jax.tree_util.tree_map_with_path(assign, cache_shape)
 
 
+def paged_cache_shardings(cache_shape, cfg: ModelConfig, mesh: Mesh):
+    """Paged KV pool sharding: ``(L, P, page_size, n_kv, hd)`` per k/v.
+
+    The **page axis is the batch-like axis** of a paged pool (requests own
+    disjoint page sets), so pages shard over the DP axes — the paged twin
+    of the slot cache's slots-over-dp rule — and kv-heads over TP when they
+    divide.  Page-table gathers/scatters then cross shards; GSPMD inserts
+    the collective.  Every entry is divisibility-guarded; the engine pads
+    the physical page count (pool + trash page) up to a multiple of the DP
+    degree (``PagedKVCache(pad_to=...)``) so the guard passes for any pool
+    size instead of silently replicating.
+    """
+    axes = MeshAxes.for_mesh(mesh)
+    dp_ax = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    def assign(path, leaf):
+        pstr = _leaf_path(path)
+        shape = tuple(leaf.shape)
+        if re.search(r"(^|/)(k|v)$", pstr) and len(shape) == 5:
+            l, p, ps, nkv, hd = shape
+            ent = [None,
+                   dp_ax if p % axes.dp_size(mesh) == 0 else None,
+                   None,
+                   axes.tp if nkv % axes.tp_size(mesh) == 0 else None,
+                   None]
+            return NamedSharding(mesh, P(*ent))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
 def make_constrainer(cfg: ModelConfig, mesh: Mesh):
     """The ``constrain(x, kind)`` hook installed into model forward calls."""
     axes = MeshAxes.for_mesh(mesh)

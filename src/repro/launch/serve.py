@@ -26,7 +26,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.data import TokenStream
 from repro.launch.mesh import make_serve_mesh
 from repro.models import model as MD
-from repro.serving import ServeEngine
+from repro.serving import FixedSlotEngine, ServeEngine
 
 
 def _resolve_mesh(args):
@@ -64,9 +64,26 @@ def main() -> None:
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="decode batch rows (continuous-batching engine); "
+                         "also the slot count of the fixed-slot engine")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="deprecated alias of --max-batch")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV-cache page size (tokens per page)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefetched per engine step — long "
+                         "prompts interleave with decode in chunks this big")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV page-pool size; smaller than "
+                         "max_batch*ceil(max_len/page_size) turns on "
+                         "eviction (host swap) under pressure")
+    ap.add_argument("--engine", choices=("paged", "fixed"), default=None,
+                    help="force an engine; default: paged (continuous "
+                         "batching) when the family supports it, else fixed "
+                         "slots")
     ap.add_argument("--amm", action="store_true",
                     help="serve MLPs through the LUT-MU path")
     ap.add_argument("--amm-backend", default="auto",
@@ -103,14 +120,24 @@ def main() -> None:
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
         params = restore_into(template, Path(args.ckpt))
 
-    if args.artifact:
-        engine = ServeEngine.from_artifact(
-            args.artifact, params, cfg, slots=args.slots,
-            max_len=args.max_len, compute_dtype=dtype, mesh=mesh)
+    max_batch = args.max_batch or args.slots
+    use_paged = (args.engine or
+                 ("paged" if MD.supports_paged(cfg) else "fixed")) == "paged"
+    if use_paged:
+        cls = ServeEngine
+        kwargs = dict(max_batch=max_batch, max_len=args.max_len,
+                      page_size=args.page_size,
+                      prefill_chunk=args.prefill_chunk,
+                      num_pages=args.num_pages, compute_dtype=dtype,
+                      mesh=mesh)
     else:
-        engine = ServeEngine(params, cfg, slots=args.slots,
-                             max_len=args.max_len, compute_dtype=dtype,
-                             mesh=mesh)
+        cls = FixedSlotEngine
+        kwargs = dict(slots=max_batch, max_len=args.max_len,
+                      compute_dtype=dtype, mesh=mesh)
+    if args.artifact:
+        engine = cls.from_artifact(args.artifact, params, cfg, **kwargs)
+    else:
+        engine = cls(params, cfg, **kwargs)
     stream = TokenStream(vocab_size=cfg.vocab_size, batch_size=1, seq_len=16)
     for i in range(args.requests):
         prompt = [int(t) for t in stream.batch(i)["tokens"][0][:8]]

@@ -233,32 +233,24 @@ def prefill_with_cache(params: dict, x: Array, cfg: ModelConfig,
     return out, (k_c, v_c)
 
 
-def decode_step(params: dict, x: Array, cfg: ModelConfig,
-                cache_k: Array, cache_v: Array, pos: Array,
-                window: Optional[Array]) -> Tuple[Array, Tuple[Array, Array]]:
-    """One-token decode against a KV cache.
+def _quantize_kv_int8(k: Array, v: Array) -> Tuple[Array, Array]:
+    """§Perf-C3: quantise new KV on write (int8 caches)."""
+    k = jnp.clip(jnp.round(k.astype(jnp.float32) / KV_INT8_SCALE), -127, 127)
+    v = jnp.clip(jnp.round(v.astype(jnp.float32) / KV_INT8_SCALE), -127, 127)
+    return k, v
 
-    x: (B, 1, D); cache_k/v: (B, S_max, n_kv, hd); pos: scalar int32 or a
-    (B,) vector of per-row positions (continuous-batching slots decode at
-    their own offsets) — the index of the new token (cache row ``b``'s
-    ``[0:pos[b]]`` is valid history).
+
+def _decode_attend(qg: Array, cache_k: Array, cache_v: Array, pos_b: Array,
+                   window: Optional[Array]) -> Array:
+    """Masked one-token attention read over a ``(B, S, n_kv, hd)`` cache
+    view.  Shared by the slot cache and the paged cache (which passes a
+    page-table *gather* of its physical pages) so the two read paths cannot
+    drift — the paged engine's bit-identical-token guarantee rests on this
+    being literally the same computation.
+
+    qg: (B, 1, n_kv, g, hd); returns (B, 1, n_kv, g, hd) float.
     """
-    b, _, d = x.shape
-    hd = cfg.resolved_head_dim
-    nq, nkv = cfg.num_heads, cfg.num_kv_heads
-    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
-    positions = pos_b[:, None]
-    q, k, v = _project_qkv(params, x, cfg, positions)
-    if cache_k.dtype == jnp.int8:  # §Perf-C3: quantise new KV on write
-        k = jnp.clip(jnp.round(k.astype(jnp.float32) / KV_INT8_SCALE),
-                     -127, 127)
-        v = jnp.clip(jnp.round(v.astype(jnp.float32) / KV_INT8_SCALE),
-                     -127, 127)
-    # per-row scatter: row b writes its new KV at its own position
-    rows = jnp.arange(b)
-    cache_k = cache_k.at[rows, pos_b].set(k[:, 0].astype(cache_k.dtype))
-    cache_v = cache_v.at[rows, pos_b].set(v[:, 0].astype(cache_v.dtype))
-    qg = _grouped(q, nkv)  # (B, 1, n_kv, g, hd)
+    hd = qg.shape[-1]
     s_max = cache_k.shape[1]
     kv_pos = jnp.arange(s_max)
     valid = kv_pos[None, :] <= pos_b[:, None]  # (B, S_max)
@@ -299,8 +291,131 @@ def decode_step(params: dict, x: Array, cfg: ModelConfig,
         w = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bngst,btnh->bsngh", w.astype(cache_v.dtype),
                          cache_v, preferred_element_type=jnp.float32)
+    return out
+
+
+def decode_step(params: dict, x: Array, cfg: ModelConfig,
+                cache_k: Array, cache_v: Array, pos: Array,
+                window: Optional[Array]) -> Tuple[Array, Tuple[Array, Array]]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_max, n_kv, hd); pos: scalar int32 or a
+    (B,) vector of per-row positions (continuous-batching slots decode at
+    their own offsets) — the index of the new token (cache row ``b``'s
+    ``[0:pos[b]]`` is valid history).
+    """
+    b, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    positions = pos_b[:, None]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cache_k.dtype == jnp.int8:
+        k, v = _quantize_kv_int8(k, v)
+    # per-row scatter: row b writes its new KV at its own position
+    rows = jnp.arange(b)
+    cache_k = cache_k.at[rows, pos_b].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, pos_b].set(v[:, 0].astype(cache_v.dtype))
+    qg = _grouped(q, nkv)  # (B, 1, n_kv, g, hd)
+    out = _decode_attend(qg, cache_k, cache_v, pos_b, window)
     out = out.reshape(b, 1, nq * hd).astype(x.dtype)
     return out @ params["wo"].astype(x.dtype), (cache_k, cache_v)
+
+
+def paged_decode_step(params: dict, x: Array, cfg: ModelConfig,
+                      k_pages: Array, v_pages: Array, page_table: Array,
+                      pos: Array, window: Optional[Array],
+                      ) -> Tuple[Array, Tuple[Array, Array]]:
+    """One-token decode against one layer's **paged** KV cache.
+
+    x: (B, 1, D); k_pages/v_pages: (P, page_size, n_kv, hd) physical pages
+    (last page is the engine's trash page); page_table: (B, max_pages)
+    int32 logical→physical map, trash-padded; pos: (B,) int32 write index
+    per row.  Rows without an active request point their whole page-table
+    row at the trash page.
+
+    The new token's K/V is scattered into its physical page, then the
+    logical view is gathered (``pages[page_table]`` — a donation-safe jitted
+    gather: under a mesh the pages shard over the DP axis and XLA inserts
+    the cross-shard collective) and handed to the *same* masked read used
+    by the slot cache, so valid positions see bit-identical values and the
+    trash/garbage rows are masked to exact zeros.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    positions = pos_b[:, None]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if k_pages.dtype == jnp.int8:
+        k, v = _quantize_kv_int8(k, v)
+    ps = k_pages.shape[1]
+    rows = jnp.arange(b)
+    phys = page_table[rows, pos_b // ps]  # (B,) physical page per row
+    off = pos_b % ps
+    k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
+    k_view = k_pages[page_table].reshape(b, -1, nkv, hd)
+    v_view = v_pages[page_table].reshape(b, -1, nkv, hd)
+    qg = _grouped(q, nkv)
+    out = _decode_attend(qg, k_view, v_view, pos_b, window)
+    out = out.reshape(b, 1, nq * hd).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), (k_pages, v_pages)
+
+
+def paged_prefill_chunk(params: dict, x: Array, cfg: ModelConfig,
+                        start: Array, n_valid: Array,
+                        k_pages: Array, v_pages: Array, page_row: Array,
+                        window: Optional[Array],
+                        ) -> Tuple[Array, Tuple[Array, Array]]:
+    """Chunked-prefill attention for ONE request against the paged cache.
+
+    x: (1, cs, D) — the chunk's hidden states, right-padded to the engine's
+    fixed ``prefill_chunk`` width (one compiled program for every prompt
+    length); ``start``: tokens already prefilled (traced scalar);
+    ``n_valid`` ≤ cs: real tokens in this chunk; page_row: (max_pages,)
+    int32, trash-padded.
+
+    Writes the chunk's K/V into the pages (padding rows scatter to the
+    trash page), then attends the chunk queries against the gathered
+    logical view under the standard causal(+window) mask.  Because masked
+    positions contribute exact zeros, every valid row's output is
+    bit-identical to the full-sequence prefill's corresponding row — which
+    is what lets the differential tests demand exact token equality with
+    the fixed-slot engine.
+    """
+    b, cs, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    idx = start + jnp.arange(cs)      # logical positions of the chunk
+    positions = idx[None]             # (1, cs)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if k_pages.dtype == jnp.int8:
+        k, v = _quantize_kv_int8(k, v)
+    ps = k_pages.shape[1]
+    trash = k_pages.shape[0] - 1
+    valid_tok = jnp.arange(cs) < n_valid
+    phys = jnp.where(valid_tok, page_row[idx // ps], trash)
+    off = idx % ps
+    k_pages = k_pages.at[phys, off].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[0].astype(v_pages.dtype))
+    k_view = k_pages[page_row].reshape(1, -1, nkv, hd)
+    v_view = v_pages[page_row].reshape(1, -1, nkv, hd)
+    if k_pages.dtype == jnp.int8:
+        # int8 pages: prefill reads the dequantised view in float (mirrors
+        # the fixed-slot engine, whose prefill is float regardless)
+        k_view = k_view.astype(jnp.float32) * KV_INT8_SCALE
+        v_view = v_view.astype(jnp.float32) * KV_INT8_SCALE
+    kv_pos = jnp.arange(k_view.shape[1])
+    ok = kv_pos[None, :] <= idx[:, None]  # causal over logical positions
+    if window is not None:
+        ok = ok & (kv_pos[None, :] > idx[:, None] - window)
+    mask = jnp.where(ok, 0.0, NEG_INF)    # (cs, S_logical) additive
+    qg = _grouped(q, nkv)
+    out = _direct_attention(qg, k_view.astype(x.dtype),
+                            v_view.astype(x.dtype), mask)
+    out = out.reshape(b, cs, nq * hd).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), (k_pages, v_pages)
 
 
 # ---------------------------------------------------------------------------

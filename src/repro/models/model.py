@@ -349,6 +349,39 @@ def forward(params: dict, tokens: Array, cfg: ModelConfig, *,
 # ---------------------------------------------------------------------------
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Families with a paged KV decode path: uniform attention stacks
+    (dense / MoE / VLM backbones).  SSM and hybrid caches are recurrent
+    state (nothing to page); enc-dec keeps its cross-attention cache
+    per-slot.  Those families serve through the fixed-slot engine."""
+    return not (cfg.family == "ssm" or cfg.is_hybrid or cfg.is_encdec)
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Physical page pool: ``(L, P, page_size, n_kv, hd)`` per k/v.  The
+    caller (``serving/kv_cache.py``) includes its trash page in ``P``."""
+    if not supports_paged(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged KV layout")
+    hd = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+    shape = (cfg.num_layers, num_pages, page_size, nkv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _mlp_out(lp: dict, mlp_in: Array, cfg: ModelConfig, constrain: Constrain,
+             cd) -> Array:
+    """The per-block MLP dispatch shared by every serving path (dense /
+    MoE / LUT-MU) — one definition so slot and paged decode cannot drift."""
+    if "moe" in lp:
+        return MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
+    if "amm_mlp" in lp:
+        return AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg, constrain)
+    m = lp["mlp"]
+    return L.gated_mlp(mlp_in, m["w_gate"].astype(cd), m["w_up"].astype(cd),
+                       m["w_down"].astype(cd), cfg.act)
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16) -> dict:
     hd = cfg.resolved_head_dim
@@ -500,16 +533,8 @@ def decode_step(params: dict, token: Array, pos: Array, cache: dict,
                 ck, cv, pos, win)
             hh = constrain(hh + out, "activation")
             mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
-            if "moe" in lp:
-                out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
-            elif "amm_mlp" in lp:
-                out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg, constrain)
-            else:
-                m = lp["mlp"]
-                out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
-                                  m["w_up"].astype(cd),
-                                  m["w_down"].astype(cd), cfg.act)
-            hh = constrain(hh + out, "activation")
+            hh = constrain(hh + _mlp_out(lp, mlp_in, cfg, constrain, cd),
+                           "activation")
             return hh, (nk, nv)
 
         h, (nk, nv) = jax.lax.scan(
@@ -519,6 +544,91 @@ def decode_step(params: dict, token: Array, pos: Array, cache: dict,
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
     return constrain(logits, "logits"), new_cache
+
+
+def paged_decode_step(params: dict, token: Array, pos: Array,
+                      page_table: Array, cache: dict, cfg: ModelConfig, *,
+                      constrain: Constrain = _id,
+                      compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+    """One decode step against the paged KV cache (uniform attention
+    stacks only — see :func:`supports_paged`).
+
+    token: (B, 1) int32; pos: (B,) int32 per-row write positions;
+    page_table: (B, max_pages) int32 logical→physical page map (rows with
+    no active request point entirely at the trash page); cache:
+    ``{"k","v"}`` of (L, P, page_size, n_kv, hd).
+
+    The per-block math is the same ``rms → attn → rms → mlp`` pipeline as
+    :func:`decode_step`'s uniform branch (attention reads through the
+    shared ``_decode_attend``), so token streams are bit-identical to the
+    slot cache — the contract the differential tests pin down.
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged decode path")
+    cd = compute_dtype
+    h = params["embed"].astype(cd)[token]  # (B, 1, D)
+    windows = window_flags(cfg)
+
+    def body(carry, xs):
+        hh = carry
+        lp, ck, cv, win = xs
+        out, (nk, nv) = A.paged_decode_step(
+            lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
+            ck, cv, page_table, pos, win)
+        hh = constrain(hh + out, "activation")
+        mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        hh = constrain(hh + _mlp_out(lp, mlp_in, cfg, constrain, cd),
+                       "activation")
+        return hh, (nk, nv)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"], windows))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
+    return constrain(logits, "logits"), dict(cache, k=nk, v=nv)
+
+
+def paged_prefill_chunk(params: dict, tokens: Array, start: Array,
+                        n_valid: Array, page_row: Array, cache: dict,
+                        cfg: ModelConfig, *, constrain: Constrain = _id,
+                        compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+    """One chunk of a single request's prefill against the paged cache.
+
+    tokens: (1, cs) right-padded to the engine's fixed chunk width (so
+    every prompt length reuses one compiled program); start / n_valid:
+    traced int32 scalars (tokens already done / real tokens in this
+    chunk); page_row: (max_pages,) int32.
+
+    Returns ``(logits (1, 1, V) f32 at the chunk's last valid position,
+    updated cache)`` — the logits only mean anything on the final chunk,
+    where they sample the request's first token exactly as the
+    full-sequence prefill would.
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged prefill path")
+    cd = compute_dtype
+    h = params["embed"].astype(cd)[tokens]
+    h = constrain(h, "activation")
+    windows = window_flags(cfg)
+
+    def body(carry, xs):
+        hh = carry
+        lp, ck, cv, win = xs
+        out, (nk, nv) = A.paged_prefill_chunk(
+            lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
+            start, n_valid, ck, cv, page_row, win)
+        hh = constrain(hh + out, "activation")
+        mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        hh = constrain(hh + _mlp_out(lp, mlp_in, cfg, constrain, cd),
+                       "activation")
+        return hh, (nk, nv)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"], windows))
+    last = jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)
+    last = L.rms_norm(last, params["final_norm"], cfg.norm_eps)
+    logits = (last @ params["lm_head"].astype(cd)).astype(jnp.float32)
+    return constrain(logits, "logits"), dict(cache, k=nk, v=nv)
 
 
 def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int, *,
@@ -629,16 +739,8 @@ def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int, *,
                 positions, win, max_len, constrain=constrain)
             hh = constrain(hh + out, "activation")
             mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
-            if "moe" in lp:
-                out = MOE.moe_apply(lp["moe"], mlp_in, cfg, constrain)
-            elif "amm_mlp" in lp:
-                out = AMM.amm_mlp_apply(lp["amm_mlp"], mlp_in, cfg, constrain)
-            else:
-                m = lp["mlp"]
-                out = L.gated_mlp(mlp_in, m["w_gate"].astype(cd),
-                                  m["w_up"].astype(cd),
-                                  m["w_down"].astype(cd), cfg.act)
-            hh = constrain(hh + out, "activation")
+            hh = constrain(hh + _mlp_out(lp, mlp_in, cfg, constrain, cd),
+                           "activation")
             return hh, (kc, vc)
 
         h, (ck, cv) = jax.lax.scan(body, h, (params["layers"], windows))

@@ -1,1 +1,5 @@
-from repro.serving.engine import Request, ServeEngine  # noqa: F401
+from repro.serving.engine import (FixedSlotEngine, Request,  # noqa: F401
+                                  ServeEngine, make_engine)
+from repro.serving.kv_cache import (PageAllocator, PagedKVCache,  # noqa: F401
+                                    PageError)
+from repro.serving.scheduler import Scheduler, StepPlan  # noqa: F401

@@ -1,21 +1,32 @@
-"""Batched serving engine: continuous batching over fixed decode slots.
+"""Serving engines: continuous batching over a paged KV cache.
 
-A deliberately compact twin of a production scheduler (vLLM-style):
+Two engines share one request API (``submit`` / ``cancel`` / ``step`` /
+``run_until_drained``):
 
-  * fixed number of **slots** (the decode batch dimension, jit-stable);
-  * incoming requests queue up; free slots are filled by running a batched
-    prefill for the newcomers (right-padded to a shared length), then every
-    engine ``step()`` decodes one token for all active slots at once;
-  * finished requests (eos or max_tokens) free their slot;
-  * the whole KV cache lives in one (L, slots, max_len, …) buffer so decode
-    is a single jitted call per step regardless of request mix;
-  * with ``cfg.amm.enabled`` the MLPs run through the LUT-MU path — the
-    paper's unit serving real traffic;
-  * with ``mesh=`` the engine is sharded: params, spliced LUT-MU tables and
-    the slot cache are placed via the ``distributed/sharding.py`` rules
-    (tables shard over codebooks on the TP axis, slots over the DP axis)
-    and prefill/decode run as jitted sharded calls with
-    ``NamedSharding``-constrained donations.
+  * :class:`ServeEngine` — the continuous-batching runtime: a host-side
+    scheduler (``serving/scheduler.py``: FCFS + priority admission,
+    page-fault eviction with host swap, cancellation, per-request
+    max-token budgets) over a paged KV cache (``serving/kv_cache.py``:
+    fixed-size pages, free-list allocator, per-request page tables) with
+    **chunked prefill** — long prompts advance one fixed-width chunk per
+    step and interleave with decode instead of stalling the batch.  Every
+    prompt length reuses the same two compiled programs (one chunk shape,
+    one decode shape).  With ``mesh=`` the engine is sharded: params by
+    the PR-3 rules, pages over the DP axis
+    (``distributed/sharding.py::paged_cache_shardings``), prefill/decode
+    as jitted calls with ``NamedSharding``-constrained donations.
+
+  * :class:`FixedSlotEngine` — the PR-3 fixed-slot engine: one
+    ``(L, slots, max_len, …)`` cache buffer, whole-prompt eager prefill on
+    admission.  Kept as the **differential-test oracle** (the paged
+    engine's int-LUT token streams must bit-match it —
+    ``tests/test_serving.py``) and as the serving path for families
+    without a paged layout (SSM / hybrid / enc-dec).
+
+Both engines produce token streams bit-identical to sequential
+one-request-at-a-time decoding; the paged engine additionally guarantees
+this under page-pressure eviction (pages are swapped to host and restored
+bit-exactly) and any admission order.
 """
 from __future__ import annotations
 
@@ -29,10 +40,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import (batch_spec, cache_shardings,
-                                        make_constrainer, param_shardings)
+from repro.distributed.sharding import (MeshAxes, batch_spec,
+                                        cache_shardings, make_constrainer,
+                                        paged_cache_shardings,
+                                        param_shardings)
 from repro.models import model as MD
 from repro.models.config import ModelConfig
+from repro.serving import scheduler as SCH
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.scheduler import Request, Scheduler
 
 Array = jax.Array
 
@@ -41,18 +57,225 @@ def _shape_tree(tree):
     return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    # filled by the engine
-    generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+def _artifact_params_cfg(artifact_path, params, cfg: ModelConfig, mesh):
+    """Load an ``amm_lm`` artifact, validate it against ``cfg``, splice its
+    LUT-MU tables into the dense params tree, and enable the AMM path with
+    the artifact's recorded settings (shared by both engines)."""
+    from repro.compiler.artifact import ArtifactError, load_artifact
+
+    art = load_artifact(artifact_path)
+    if art.kind != "amm_lm":
+        raise ArtifactError(
+            f"ServeEngine needs an amm_lm artifact, got {art.kind!r}")
+    if art.manifest.get("arch") != cfg.name:
+        raise ArtifactError(
+            f"artifact was compiled for arch {art.manifest.get('arch')!r}"
+            f", engine config is {cfg.name!r}")
+    # arch name alone doesn't pin geometry (reduced configs share it)
+    if art.manifest.get("num_layers") != cfg.num_layers:
+        raise ArtifactError(
+            f"artifact has {art.manifest.get('num_layers')} layers, "
+            f"config expects {cfg.num_layers} (reduced vs full?)")
+    d_out = art.tensors["layer0/lut_down"].shape[-1]
+    if d_out != cfg.d_model:
+        raise ArtifactError(
+            f"artifact d_model {d_out} != config d_model {cfg.d_model}")
+    cfg = dataclasses.replace(
+        cfg, amm=dataclasses.replace(cfg.amm, enabled=True,
+                                     **art.manifest["amm"]))
+    want = art.manifest.get("mesh")
+    if want and mesh is not None:
+        have = {ax: int(n) for ax, n in mesh.shape.items()}
+        if {k: int(v) for k, v in want.items()} != have:
+            print(f"[serve] note: artifact was compiled for mesh {want}, "
+                  f"serving on {have}")
+    return art.splice_lm_params(params), cfg
 
 
 class ServeEngine:
+    """Continuous-batching serving over a paged KV cache."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = None,
+                 slots: int = None, max_len: int = 256, page_size: int = 16,
+                 prefill_chunk: int = 32, num_pages: int = None,
+                 compute_dtype=jnp.float32, mesh=None):
+        if not MD.supports_paged(cfg):
+            raise ValueError(
+                f"family {cfg.family!r} has no paged decode path — serve it "
+                "with FixedSlotEngine")
+        self.cfg = cfg
+        # ``slots`` is the fixed-slot engine's name for the same knob; keep
+        # it as an alias so call sites migrate freely.
+        self.max_batch = int(max_batch or slots or 4)
+        self.max_len = max_len
+        self.page_size = ps = int(page_size)
+        self.prefill_chunk = int(prefill_chunk)
+        self.max_pages_per_seq = mp = -(-max_len // ps)
+        if num_pages is None:
+            # full provisioning: no eviction unless the caller shrinks it
+            num_pages = self.max_batch * mp
+        self.cd = compute_dtype
+        self.mesh = mesh
+        self._uid = itertools.count()
+
+        dp = 1 if mesh is None else MeshAxes.for_mesh(mesh).dp_size(mesh)
+        self.kv = PagedKVCache(cfg, num_pages=num_pages, page_size=ps,
+                               dtype=compute_dtype, pad_to=dp)
+        self.sched = Scheduler(
+            max_batch=self.max_batch, allocator=self.kv.allocator,
+            page_size=ps, max_pages_per_seq=mp,
+            prefill_chunk=self.prefill_chunk, max_len=max_len)
+
+        if mesh is None:
+            self._constrain = MD._id
+            self.params = params
+            jit_d, jit_p = {}, {}
+        else:
+            self._constrain = make_constrainer(cfg, mesh)
+            p_sh = param_shardings(_shape_tree(params), cfg, mesh)
+            self.params = jax.device_put(params, p_sh)
+            c_sh = paged_cache_shardings(_shape_tree(self.kv.buffers), cfg,
+                                         mesh)
+            self._cache_sh = c_sh
+            self.kv.buffers = jax.device_put(self.kv.buffers, c_sh)
+            rep = NamedSharding(mesh, P())
+            tok_sh = NamedSharding(mesh, batch_spec(mesh, self.max_batch))
+            jit_d = {"in_shardings": (p_sh, tok_sh, rep, rep, c_sh),
+                     "out_shardings": (None, c_sh)}
+            jit_p = {"in_shardings": (p_sh, rep, rep, rep, rep, c_sh),
+                     "out_shardings": (None, c_sh)}
+        constrain = self._constrain
+
+        def _decode(params, token, pos_vec, page_table, cache):
+            return MD.paged_decode_step(
+                params, token, pos_vec, page_table, cache, cfg,
+                constrain=constrain, compute_dtype=compute_dtype)
+
+        def _prefill(params, tokens, start, n_valid, page_row, cache):
+            return MD.paged_prefill_chunk(
+                params, tokens, start, n_valid, page_row, cache, cfg,
+                constrain=constrain, compute_dtype=compute_dtype)
+
+        self._decode = jax.jit(_decode, donate_argnums=(4,), **jit_d)
+        self._prefill = jax.jit(_prefill, donate_argnums=(5,), **jit_p)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_artifact(cls, artifact_path, params, cfg: ModelConfig,
+                      **kwargs) -> "ServeEngine":
+        """Serve a compiled ``amm_lm`` artifact: splice its LUT-MU tables
+        into ``params`` (replacing the dense MLPs) and enable the AMM path
+        with the artifact's recorded settings.
+
+        ``params`` is the dense-model params tree the artifact was compiled
+        against (e.g. a restored checkpoint); the arch name must match.
+        Pass ``mesh=`` to serve sharded; when the manifest records an
+        intended mesh (``python -m repro.compiler lm --mesh DxM``) a
+        mismatching engine mesh is reported but not rejected — the sharding
+        rules re-derive a valid placement for any mesh.
+        """
+        params, cfg = _artifact_params_cfg(artifact_path, params, cfg,
+                                           kwargs.get("mesh"))
+        return cls(params, cfg, **kwargs)
+
+    # -- API -------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None, priority: int = 0) -> Request:
+        req = Request(uid=next(self._uid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      priority=priority)
+        self.sched.submit(req)
+        return req
+
+    def cancel(self, uid: int) -> bool:
+        return self.sched.cancel(uid)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.sched.live())
+
+    def step(self) -> List[Request]:
+        """One engine iteration: execute the scheduler's plan — swap-outs,
+        swap-ins, at most one prefill chunk, one batched decode — and
+        retire finished requests."""
+        plan = self.sched.schedule()
+        resharded = False
+        for req, old_pages in plan.swap_out:
+            # the allocator already released these pages; copy them before
+            # anything writes (the first writes happen below)
+            req.host_kv = self.kv.gather_host(old_pages)
+        for req in plan.swap_in:
+            self.kv.scatter_host(req.host_kv, req.pages)
+            req.host_kv = None
+            resharded = True
+        if resharded and self.mesh is not None:
+            # eager swap-in updates drift leaf shardings; restore them so
+            # the jitted calls' explicit in_shardings (and donation) line up
+            self.kv.buffers = jax.device_put(self.kv.buffers, self._cache_sh)
+
+        finished: List[Request] = []
+        if plan.prefill is not None:
+            self._run_prefill_chunk(plan.prefill, finished)
+        if plan.decode:
+            self._run_decode(plan.decode, finished)
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.has_work:
+                break
+        return done
+
+    # -- internals ---------------------------------------------------------
+    def _run_prefill_chunk(self, chunk: SCH.PrefillChunk,
+                           finished: List[Request]) -> None:
+        req = chunk.req
+        toks = np.zeros((1, self.prefill_chunk), np.int32)
+        toks[0, : chunk.n_valid] = req.prompt[chunk.start:
+                                              chunk.start + chunk.n_valid]
+        page_row = self.kv.page_row(req.pages, self.max_pages_per_seq)
+        logits, self.kv.buffers = self._prefill(
+            self.params, jnp.asarray(toks),
+            jnp.asarray(chunk.start, jnp.int32),
+            jnp.asarray(chunk.n_valid, jnp.int32),
+            jnp.asarray(page_row), self.kv.buffers)
+        req.pf_done += chunk.n_valid
+        if req.pf_done == len(req.prompt):
+            req.generated.append(int(jnp.argmax(logits[0, -1])))
+            if req.budget_reached(self.max_len):
+                self.sched.retire(req)
+                finished.append(req)
+            else:
+                self.sched.prefill_finished(req)
+
+    def _run_decode(self, decode, finished: List[Request]) -> None:
+        token = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        table = np.full((self.max_batch, self.max_pages_per_seq),
+                        self.kv.trash, np.int32)
+        for row, req in decode:
+            token[row, 0] = req.generated[-1]
+            pos[row] = req.next_pos
+            table[row, : len(req.pages)] = req.pages
+        logits, self.kv.buffers = self._decode(
+            self.params, jnp.asarray(token), jnp.asarray(pos),
+            jnp.asarray(table), self.kv.buffers)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for row, req in decode:
+            req.generated.append(int(nxt[row]))
+            if req.budget_reached(self.max_len):
+                self.sched.retire(req)
+                finished.append(req)
+
+
+class FixedSlotEngine:
+    """The PR-3 fixed-slot engine: continuous batching over fixed decode
+    slots with one ``(L, slots, max_len, …)`` cache buffer and whole-prompt
+    eager prefill on admission.  The paged engine's differential-test
+    oracle, and the serving path for SSM / hybrid / enc-dec families."""
+
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  max_len: int = 256, compute_dtype=jnp.float32, mesh=None):
         self.cfg = cfg
@@ -101,60 +324,27 @@ class ServeEngine:
     # -- construction ------------------------------------------------------
     @classmethod
     def from_artifact(cls, artifact_path, params, cfg: ModelConfig,
-                      **kwargs) -> "ServeEngine":
-        """Serve a compiled ``amm_lm`` artifact: splice its LUT-MU tables
-        into ``params`` (replacing the dense MLPs) and enable the AMM path
-        with the artifact's recorded settings.
-
-        ``params`` is the dense-model params tree the artifact was compiled
-        against (e.g. a restored checkpoint); the arch name must match.
-        Pass ``mesh=`` to serve sharded; when the manifest records an
-        intended mesh (``python -m repro.compiler lm --mesh DxM``) a
-        mismatching engine mesh is reported but not rejected — the sharding
-        rules re-derive a valid placement for any mesh.
-        """
-        from repro.compiler.artifact import ArtifactError, load_artifact
-
-        art = load_artifact(artifact_path)
-        if art.kind != "amm_lm":
-            raise ArtifactError(
-                f"ServeEngine needs an amm_lm artifact, got {art.kind!r}")
-        if art.manifest.get("arch") != cfg.name:
-            raise ArtifactError(
-                f"artifact was compiled for arch {art.manifest.get('arch')!r}"
-                f", engine config is {cfg.name!r}")
-        # arch name alone doesn't pin geometry (reduced configs share it)
-        if art.manifest.get("num_layers") != cfg.num_layers:
-            raise ArtifactError(
-                f"artifact has {art.manifest.get('num_layers')} layers, "
-                f"config expects {cfg.num_layers} (reduced vs full?)")
-        d_out = art.tensors["layer0/lut_down"].shape[-1]
-        if d_out != cfg.d_model:
-            raise ArtifactError(
-                f"artifact d_model {d_out} != config d_model {cfg.d_model}")
-        cfg = dataclasses.replace(
-            cfg, amm=dataclasses.replace(cfg.amm, enabled=True,
-                                         **art.manifest["amm"]))
-        want = art.manifest.get("mesh")
-        mesh = kwargs.get("mesh")
-        if want and mesh is not None:
-            have = {ax: int(n) for ax, n in mesh.shape.items()}
-            if {k: int(v) for k, v in want.items()} != have:
-                print(f"[serve] note: artifact was compiled for mesh {want}, "
-                      f"serving on {have}")
-        return cls(art.splice_lm_params(params), cfg, **kwargs)
+                      **kwargs) -> "FixedSlotEngine":
+        """Serve a compiled ``amm_lm`` artifact through fixed slots (see
+        :meth:`ServeEngine.from_artifact`)."""
+        params, cfg = _artifact_params_cfg(artifact_path, params, cfg,
+                                           kwargs.get("mesh"))
+        return cls(params, cfg, **kwargs)
 
     # -- API -------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None, priority: int = 0) -> Request:
+        del priority  # fixed-slot admission is strictly FIFO
         req = Request(uid=next(self._uid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, eos_id=eos_id)
         self.queue.append(req)
         return req
 
-    def _admit(self) -> None:
+    def _admit(self) -> List[Request]:
         """Fill free slots: per-request prefill (batch=1 rows of the cache)."""
+        finished: List[Request] = []
         free = [s for s in range(self.slots) if s not in self.active]
+        spliced = False
         while free and self.queue:
             slot = free.pop(0)
             req = self.queue.popleft()
@@ -168,21 +358,27 @@ class ServeEngine:
                     full, one[:, 0].astype(full.dtype), slot, 1)
                 if one.ndim >= 2 and full.shape[1] == self.slots else full,
                 self.cache, cache1)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(nxt)
+            spliced = True
+            req.generated.append(int(jnp.argmax(logits[0, -1])))
+            if req.budget_reached(self.max_len):
+                req.done = True
+                finished.append(req)
+                free.insert(0, slot)
+                continue
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
-        if self.mesh is not None:
+        if spliced and self.mesh is not None:
             # the eager splice drifts leaf shardings off the rule-engine
             # placement; restore it so the sharded decode's explicit
             # in_shardings (and donation) line up.
             self.cache = jax.device_put(self.cache, self._cache_sh)
+        return finished
 
     def step(self) -> List[Request]:
         """One engine iteration: admit, batched decode, retire."""
-        self._admit()
+        finished = self._admit()
         if not self.active:
-            return []
+            return finished
         token = np.zeros((self.slots, 1), dtype=np.int32)
         for slot, req in self.active.items():
             token[slot, 0] = req.generated[-1] if req.generated else 0
@@ -190,7 +386,6 @@ class ServeEngine:
             self.params, jnp.asarray(token),
             jnp.asarray(self.pos, jnp.int32), self.cache)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        finished = []
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])
             req.generated.append(tok)
@@ -210,3 +405,17 @@ class ServeEngine:
             if not self.queue and not self.active:
                 break
         return done
+
+
+def make_engine(params, cfg: ModelConfig, **kwargs):
+    """Pick the continuous-batching engine when the family supports paged
+    KV, else fall back to fixed slots (mapping ``max_batch`` to ``slots``
+    and dropping the paged-only kwargs)."""
+    if MD.supports_paged(cfg):
+        return ServeEngine(params, cfg, **kwargs)
+    max_batch = kwargs.pop("max_batch", None)
+    if max_batch is not None:
+        kwargs.setdefault("slots", max_batch)
+    for k in ("page_size", "prefill_chunk", "num_pages"):
+        kwargs.pop(k, None)
+    return FixedSlotEngine(params, cfg, **kwargs)

@@ -1,0 +1,155 @@
+"""Paged KV cache: fixed-size pages, a free-list allocator, per-request
+page tables, and host swap for preempted requests.
+
+Layout: one physical buffer per layer tensor, ``(L, P+1, page_size, n_kv,
+hd)``.  Physical pages ``0..P-1`` are allocatable; the **last** page is the
+*trash page* — scatter targets for padding tokens and for the batch rows
+that have no active request point there, so jitted gather/scatter never
+needs a dynamic shape or a branch.  Logical position ``t`` of a request
+lives at ``(page_table[t // page_size], t % page_size)``.
+
+The allocator is deliberately host-side and strict: double-frees and
+foreign pages raise ``PageError`` (the scheduler fuzz tests drive random
+admit/evict/cancel traces through it and assert the pool is conserved).
+
+Swap: evicting a request under page pressure copies its pages to host
+(``gather_host``) before the allocator hands them to someone else; resume
+re-allocates and writes the copies back (``scatter_host``) — bit-exact
+restore, so preemption cannot change a token stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+class PageError(RuntimeError):
+    """Allocator misuse: double free, foreign page, or negative request."""
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` fixed-size pages.
+
+    ``alloc`` is all-or-nothing (returns ``None`` when the request cannot
+    be satisfied — the scheduler then evicts or waits); ``free`` validates
+    every page so leaks and double-frees surface as ``PageError`` instead
+    of silent cache corruption.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"need at least one page, got {num_pages}")
+        self.num_pages = num_pages
+        self._free: Deque[int] = deque(range(num_pages))
+        self._free_set: Set[int] = set(range(num_pages))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise PageError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self._free_set.difference_update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not 0 <= p < self.num_pages:
+                raise PageError(f"page {p} is not part of this pool")
+            if p in self._free_set:
+                raise PageError(f"double free of page {p}")
+        for p in pages:
+            self._free.append(p)
+            self._free_set.add(p)
+
+    def free_pages(self) -> Set[int]:
+        """Snapshot of the free set (for invariant checks)."""
+        return set(self._free_set)
+
+
+@dataclasses.dataclass
+class HostKV:
+    """Host-side copy of a swapped-out request's pages (k/v per layer)."""
+
+    k: np.ndarray  # (L, n_pages, page_size, n_kv, hd)
+    v: np.ndarray
+
+    @property
+    def num_pages(self) -> int:
+        return int(self.k.shape[1])
+
+
+class PagedKVCache:
+    """Device-resident paged K/V buffers plus the page-pool allocator.
+
+    The jitted engine functions take ``buffers`` (a ``{"k","v"}`` dict with
+    a leading layer axis) with donation, so the engine writes the returned
+    dict back here after every call.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
+                 dtype=jnp.float32, pad_to: int = 1):
+        if not MD.supports_paged(cfg):
+            raise ValueError(
+                f"family {cfg.family!r} has no paged KV layout")
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.allocator = PageAllocator(num_pages)
+        # +1 physical page for the trash page, then round the physical
+        # count up to a multiple of ``pad_to`` (the engine passes the DP
+        # degree) so the page axis actually divides the mesh and the
+        # pages-over-DP sharding rule activates instead of silently
+        # replicating.  Padding pages are never allocated; the trash page
+        # is always the LAST physical page.
+        total = -(-(num_pages + 1) // pad_to) * pad_to
+        self.trash = total - 1
+        self.buffers: Dict[str, Array] = MD.init_paged_cache(
+            cfg, total, page_size, dtype)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache rows."""
+        return -(-n_tokens // self.page_size)
+
+    def page_row(self, pages: List[int], max_pages: int) -> np.ndarray:
+        """A request's page-table row, padded with the trash page."""
+        row = np.full((max_pages,), self.trash, np.int32)
+        row[: len(pages)] = pages
+        return row
+
+    def gather_host(self, pages: List[int]) -> HostKV:
+        """Copy the given physical pages to host (swap-out)."""
+        idx = np.asarray(pages, np.int32)
+        return HostKV(k=np.asarray(self.buffers["k"][:, idx]),
+                      v=np.asarray(self.buffers["v"][:, idx]))
+
+    def scatter_host(self, host: HostKV, pages: List[int]) -> None:
+        """Write a host copy back into (newly allocated) pages (swap-in)."""
+        if len(pages) < host.num_pages:
+            raise PageError(
+                f"swap-in needs {host.num_pages} pages, got {len(pages)}")
+        idx = jnp.asarray(pages[: host.num_pages], jnp.int32)
+        self.buffers = {
+            "k": self.buffers["k"].at[:, idx].set(
+                jnp.asarray(host.k).astype(self.buffers["k"].dtype)),
+            "v": self.buffers["v"].at[:, idx].set(
+                jnp.asarray(host.v).astype(self.buffers["v"].dtype)),
+        }

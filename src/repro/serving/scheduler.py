@@ -1,0 +1,299 @@
+"""Continuous-batching scheduler: FCFS + priority admission, chunked
+prefill, page-fault eviction, cancellation.
+
+Pure host-side logic — no jax arrays — so the fuzz tests can drive
+millions of admit/evict/cancel transitions without touching a model.  The
+engine calls :meth:`Scheduler.schedule` once per step and executes the
+returned :class:`StepPlan` (swap-outs first, then swap-ins, one prefill
+chunk, one batched decode).
+
+Request lifecycle::
+
+    WAITING ──admit (row + prompt pages)──► PREFILL ──last chunk──► RUNNING
+       ▲                                       │                      │
+       └────────── evicted mid-prefill ◄───────┘     page fault, no   │
+                                                     victim available │
+    SWAPPED (pages copied to host) ◄──────────────────────────────────┘
+       └─────resume (row + pages re-allocated, pages restored)──► RUNNING
+
+Policies (documented in docs/serving.md):
+
+  * **admission** — highest priority first, FIFO within a priority, and
+    strictly in order (no skipping past a request that doesn't fit, so a
+    large request is never starved by a stream of small ones);
+  * **eviction** — a decode-time page fault evicts the lowest-priority,
+    most-recently-admitted *other* running request (swap to host); if no
+    other request is running the faulting request swaps itself out.  A
+    mid-prefill victim is simply restarted (its cache is recomputable);
+  * **budgets** — ``max_new_tokens`` bounds every request (checked right
+    after prefill too, so a request never overshoots its budget), and the
+    engine's ``max_len`` bounds prompt+generation.
+
+Swapping restores pages bit-exactly, so no schedule — however adversarial
+— can change a token stream (asserted by ``tests/test_scheduler_fuzz.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.kv_cache import HostKV, PageAllocator
+
+# request states
+WAITING = "waiting"
+PREFILL = "prefill"
+RUNNING = "running"
+SWAPPED = "swapped"
+DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    priority: int = 0
+    # filled by the engine / scheduler
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    cancelled: bool = False
+    state: str = WAITING
+    seq: int = -1            # admission-order tiebreak (set at submit)
+    row: Optional[int] = None
+    pages: List[int] = dataclasses.field(default_factory=list)
+    pf_done: int = 0         # prompt tokens already prefilled
+    host_kv: Optional[HostKV] = None  # swap-out copy while SWAPPED
+
+    @property
+    def next_pos(self) -> int:
+        """Cache index the next decode step writes (= tokens written)."""
+        return len(self.prompt) + len(self.generated) - 1
+
+    def budget_reached(self, max_len: int) -> bool:
+        last = self.generated[-1] if self.generated else None
+        return (len(self.generated) >= self.max_new_tokens
+                or (self.eos_id is not None and last == self.eos_id)
+                or len(self.prompt) + len(self.generated) >= max_len)
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    req: Request
+    start: int    # tokens already prefilled
+    n_valid: int  # real tokens in this chunk
+
+
+@dataclasses.dataclass
+class StepPlan:
+    swap_out: List[Tuple[Request, List[int]]] = dataclasses.field(
+        default_factory=list)  # (request, pages to copy out) — pages already
+    # released to the allocator; the engine must copy them before any write
+    swap_in: List[Request] = dataclasses.field(default_factory=list)
+    prefill: Optional[PrefillChunk] = None
+    decode: List[Tuple[int, Request]] = dataclasses.field(
+        default_factory=list)  # (row, request)
+
+
+class Scheduler:
+    def __init__(self, *, max_batch: int, allocator: PageAllocator,
+                 page_size: int, max_pages_per_seq: int, prefill_chunk: int,
+                 max_len: int):
+        self.max_batch = max_batch
+        self.alloc = allocator
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        self.prefill_chunk = prefill_chunk
+        self.max_len = max_len
+        self.rows: Dict[int, Request] = {}   # row -> PREFILL/RUNNING request
+        self.waiting: List[Request] = []
+        self.swapped: List[Request] = []
+        self._seq = itertools.count()
+
+    # -- submission / cancellation ----------------------------------------
+    def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens ≥ max_len {self.max_len}")
+        total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        if self._pages_for(total) > self.alloc.num_pages:
+            raise ValueError(
+                f"request needs {self._pages_for(total)} pages, pool has "
+                f"{self.alloc.num_pages} — it could never be scheduled")
+        req.seq = next(self._seq)
+        req.state = WAITING
+        self.waiting.append(req)
+
+    def cancel(self, uid: int) -> bool:
+        """Drop a request wherever it is; frees its row/pages.  Returns
+        False when the uid is unknown or already finished."""
+        for req in self.waiting:
+            if req.uid == uid:
+                self.waiting.remove(req)
+                return self._mark_cancelled(req)
+        for req in self.swapped:
+            if req.uid == uid:
+                self.swapped.remove(req)
+                req.host_kv = None
+                return self._mark_cancelled(req)
+        for row, req in list(self.rows.items()):
+            if req.uid == uid:
+                self._release(req)
+                return self._mark_cancelled(req)
+        return False
+
+    def _mark_cancelled(self, req: Request) -> bool:
+        req.state = DONE
+        req.cancelled = True
+        req.done = True
+        return True
+
+    # -- per-step planning -------------------------------------------------
+    def schedule(self) -> StepPlan:
+        plan = StepPlan()
+        self._resume(plan)
+        self._admit()
+        pf = [r for r in self.rows.values() if r.state == PREFILL]
+        if pf:
+            req = self._ordered(pf)[0]
+            n = min(self.prefill_chunk, len(req.prompt) - req.pf_done)
+            plan.prefill = PrefillChunk(req, req.pf_done, n)
+        for req in self._ordered(
+                [r for r in self.rows.values() if r.state == RUNNING]):
+            if req.state != RUNNING:
+                continue  # evicted by an earlier request's page fault
+            if req.next_pos >= len(req.pages) * self.page_size:
+                if not self._ensure_page(req, plan):
+                    continue  # swapped itself out
+            plan.decode.append((req.row, req))
+        plan.decode = [(row, r) for row, r in plan.decode
+                       if r.state == RUNNING]
+        if plan.prefill is not None and plan.prefill.req.state != PREFILL:
+            plan.prefill = None  # chunk's request was evicted by a page fault
+        return plan
+
+    def prefill_finished(self, req: Request) -> None:
+        """Called by the engine once the last chunk ran and the first token
+        was sampled; the request joins the decode batch next step."""
+        req.state = RUNNING
+
+    def retire(self, req: Request) -> None:
+        self._release(req)
+        req.state = DONE
+        req.done = True
+
+    def live(self) -> List[Request]:
+        return (self.waiting + self.swapped + list(self.rows.values()))
+
+    # -- internals ---------------------------------------------------------
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    @staticmethod
+    def _ordered(reqs: List[Request]) -> List[Request]:
+        return sorted(reqs, key=lambda r: (-r.priority, r.seq))
+
+    def _free_row(self) -> Optional[int]:
+        for row in range(self.max_batch):
+            if row not in self.rows:
+                return row
+        return None
+
+    def _release(self, req: Request) -> None:
+        if req.row is not None:
+            del self.rows[req.row]
+            req.row = None
+        if req.pages:
+            self.alloc.free(req.pages)
+            req.pages = []
+
+    def _resume(self, plan: StepPlan) -> None:
+        for req in self._ordered(list(self.swapped)):
+            row = self._free_row()
+            if row is None:
+                break
+            need = max(self._pages_for(req.next_pos + 1),
+                       req.host_kv.num_pages if req.host_kv else 0)
+            pages = self.alloc.alloc(need)
+            if pages is None:
+                break  # strict order: don't let later requests jump ahead
+            req.pages = pages
+            req.row = row
+            self.rows[row] = req
+            req.state = RUNNING
+            self.swapped.remove(req)
+            plan.swap_in.append(req)
+
+    def _admit(self) -> None:
+        for req in self._ordered(list(self.waiting)):
+            row = self._free_row()
+            if row is None:
+                break
+            pages = self.alloc.alloc(self._pages_for(len(req.prompt) + 1))
+            if pages is None:
+                break
+            req.pages = pages
+            req.row = row
+            self.rows[row] = req
+            req.state = PREFILL
+            req.pf_done = 0
+            self.waiting.remove(req)
+
+    def _ensure_page(self, req: Request, plan: StepPlan) -> bool:
+        """Grow ``req`` by one page, evicting if the pool is dry.  Returns
+        False when ``req`` had to swap itself out instead."""
+        while True:
+            pages = self.alloc.alloc(1)
+            if pages is not None:
+                req.pages += pages
+                return True
+            # Requests resumed in THIS plan are not evictable: their host
+            # KV copy hasn't been restored yet, so swapping them out again
+            # would gather garbage pages (and land them in both swap_in and
+            # swap_out — the engine executes swap-outs first and would read
+            # pages whose restore never ran).
+            resumed = {r.uid for r in plan.swap_in}
+            victims = [r for r in self.rows.values()
+                       if r is not req and r.state in (RUNNING, PREFILL)
+                       and r.uid not in resumed]
+            if not victims:
+                self._swap_out(req, plan)
+                return False
+            self._evict(min(victims, key=lambda r: (r.priority, -r.seq)),
+                        plan)
+
+    def _evict(self, victim: Request, plan: StepPlan) -> None:
+        if victim.state == PREFILL:
+            # recomputable: back to the head of the queue, no swap needed
+            self._release(victim)
+            victim.state = WAITING
+            victim.pf_done = 0
+            self.waiting.append(victim)  # seq preserved → re-admits in order
+        else:
+            self._swap_out(victim, plan)
+
+    def _swap_out(self, req: Request, plan: StepPlan) -> None:
+        plan.swap_out.append((req, list(req.pages)))
+        self._release(req)
+        req.state = SWAPPED
+        self.swapped.append(req)
+
+    # -- invariants (used by the fuzz tests) --------------------------------
+    def check_invariants(self) -> None:
+        owned: List[int] = []
+        for req in self.live():
+            owned.extend(req.pages)
+        assert len(owned) == len(set(owned)), "page owned by two requests"
+        free = self.alloc.free_pages()
+        assert not (set(owned) & free), "allocated page is on the free list"
+        assert len(owned) + len(free) == self.alloc.num_pages, (
+            f"page leak: {len(owned)} owned + {len(free)} free != "
+            f"{self.alloc.num_pages}")
+        for row, req in self.rows.items():
+            assert req.row == row and req.state in (PREFILL, RUNNING)
+        for req in self.waiting + self.swapped:
+            assert req.row is None
+            assert not req.pages, "queued request still holds pages"

@@ -1,4 +1,11 @@
-"""Serving engine tests: continuous batching equals sequential decode."""
+"""Serving engine tests.
+
+The load-bearing property: **every** engine (fixed-slot, paged
+continuous-batching, paged under page-pressure eviction) produces token
+streams bit-identical to sequential one-request-at-a-time decode — and the
+paged and fixed-slot engines bit-match *each other* on the same request
+set, including on the int-LUT AMM path (the PR-4 acceptance criterion).
+"""
 import dataclasses
 
 import jax
@@ -7,16 +14,32 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import model as MD
-from repro.serving import ServeEngine
+from repro.serving import FixedSlotEngine, ServeEngine, make_engine
 
 
-@pytest.fixture(scope="module")
-def setup():
+def _tiny_cfg(amm=False):
     cfg = get_config("qwen3-14b", reduced=True)
     cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, d_ff=128,
                               vocab_size=64, num_heads=2, num_kv_heads=1,
                               head_dim=32)
+    if amm:
+        cfg = dataclasses.replace(
+            cfg, amm=dataclasses.replace(cfg.amm, enabled=True))
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
     params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def setup_amm():
+    """int8-LUT AMM serving params — the paper's unit on the decode path."""
+    cfg = _tiny_cfg(amm=True)
+    params = MD.init_params(cfg, jax.random.PRNGKey(0), serving=True)
     return cfg, params
 
 
@@ -37,7 +60,7 @@ def _reference_generate(params, cfg, prompt, n_new):
 
 def test_engine_matches_sequential(setup):
     cfg, params = setup
-    eng = ServeEngine(params, cfg, slots=2, max_len=64)
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64)
     prompts = [[1, 2, 3], [7, 5], [9, 9, 9, 2]]
     reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
     done = eng.run_until_drained()
@@ -50,7 +73,7 @@ def test_engine_matches_sequential(setup):
 
 def test_engine_more_requests_than_slots(setup):
     cfg, params = setup
-    eng = ServeEngine(params, cfg, slots=2, max_len=64)
+    eng = ServeEngine(params, cfg, slots=2, max_len=64)  # slots alias
     reqs = [eng.submit([i + 1, i + 2], max_new_tokens=4) for i in range(5)]
     done = eng.run_until_drained()
     assert len(done) == 5
@@ -61,8 +84,124 @@ def test_engine_eos_stops_early(setup):
     cfg, params = setup
     ref = _reference_generate(params, cfg, [1, 2, 3], 8)
     eos = ref[2]  # force an early stop at the 3rd generated token
-    eng = ServeEngine(params, cfg, slots=1, max_len=64)
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=64)
     r = eng.submit([1, 2, 3], max_new_tokens=8, eos_id=eos)
     eng.run_until_drained()
     assert r.generated[-1] == eos
     assert len(r.generated) == 3
+
+
+# ---------------------------------------------------------------------------
+# Differential: paged continuous batching vs the fixed-slot oracle.
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[1, 2, 3], [7, 5], [9, 9, 9, 2], [4, 4, 1, 1, 5, 6, 7],
+           [3, 1], list(range(1, 21))]  # mixed lengths incl. multi-chunk
+
+
+def _drain_both(params, cfg, *, paged_kwargs):
+    fixed = FixedSlotEngine(params, cfg, slots=2, max_len=64)
+    rf = [fixed.submit(p, max_new_tokens=8) for p in PROMPTS]
+    fixed.run_until_drained()
+    paged = ServeEngine(params, cfg, max_len=64, **paged_kwargs)
+    rp = [paged.submit(p, max_new_tokens=8) for p in PROMPTS]
+    paged.run_until_drained()
+    return rf, rp, paged
+
+
+@pytest.mark.parametrize("amm", [False, True], ids=["dense", "int-lut"])
+def test_paged_bitmatches_fixed_slot(setup, setup_amm, amm):
+    """The acceptance criterion: same request set through both engines →
+    bit-identical token streams (chunked prefill included), dense and
+    int-LUT decode paths."""
+    cfg, params = setup_amm if amm else setup
+    rf, rp, _ = _drain_both(params, cfg,
+                            paged_kwargs=dict(max_batch=3, page_size=16,
+                                              prefill_chunk=4))
+    for f, p in zip(rf, rp):
+        assert f.done and p.done
+        assert f.generated == p.generated, (f.prompt, f.generated, p.generated)
+
+
+def test_paged_bitmatches_under_eviction(setup):
+    """A page pool too small for the workload forces mid-decode eviction
+    (host swap) — streams must still bit-match the fixed-slot engine."""
+    cfg, params = setup
+    rf, rp, paged = _drain_both(
+        params, cfg, paged_kwargs=dict(max_batch=3, page_size=4,
+                                       prefill_chunk=4, num_pages=9))
+    for f, p in zip(rf, rp):
+        assert f.generated == p.generated, (f.prompt, f.generated, p.generated)
+    assert paged.kv.allocator.in_use == 0  # every page returned
+    paged.sched.check_invariants()
+
+
+def test_cancellation(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=64, prefill_chunk=4)
+    a = eng.submit([1, 2, 3], max_new_tokens=6)
+    b = eng.submit([7, 5], max_new_tokens=6)      # waits behind a
+    c = eng.submit([9, 9, 9, 2], max_new_tokens=6)
+    assert eng.cancel(c.uid)          # cancel while queued
+    eng.step()
+    assert eng.cancel(a.uid)          # cancel while active
+    eng.run_until_drained()
+    assert a.cancelled and c.cancelled and not b.cancelled
+    assert b.generated == _reference_generate(params, cfg, [7, 5], 6)
+    assert not eng.cancel(b.uid)      # finished → not cancellable
+    assert eng.kv.allocator.in_use == 0
+
+
+def test_priority_admission(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=64)
+    lo = eng.submit([1, 2, 3], max_new_tokens=3)
+    hi = eng.submit([7, 5], max_new_tokens=3, priority=5)
+    order = []
+    while eng.has_work:
+        for r in eng.step():
+            order.append(r.uid)
+    # with one row, the high-priority request must finish first
+    assert order == [hi.uid, lo.uid]
+
+
+def test_submit_validation(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=16, page_size=4,
+                      num_pages=2)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([])
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(list(range(20)))
+    with pytest.raises(ValueError, match="never"):
+        eng.submit([1, 2, 3], max_new_tokens=12)  # needs 4 pages, pool has 2
+
+
+def test_make_engine_family_fallback(setup):
+    cfg, params = setup
+    assert isinstance(make_engine(params, cfg, max_batch=2, max_len=64),
+                      ServeEngine)
+    ssm = get_config("mamba2-370m", reduced=True)
+    assert not MD.supports_paged(ssm)
+    with pytest.raises(ValueError, match="FixedSlotEngine"):
+        ServeEngine(params, ssm)
+    ssm_params = MD.init_params(ssm, jax.random.PRNGKey(0))
+    eng = make_engine(ssm_params, ssm, max_batch=8, max_len=32,
+                      page_size=4, prefill_chunk=4)
+    assert isinstance(eng, FixedSlotEngine)
+    assert eng.slots == 8  # max_batch maps to slots, not dropped
+
+
+def test_page_pool_pads_to_dp_degree(setup):
+    """The physical page axis (pool + trash) rounds up to the DP degree so
+    pages-over-DP sharding activates for any pool size; the trash page is
+    always the last physical page."""
+    from repro.serving import PagedKVCache
+
+    cfg, _ = setup
+    kv = PagedKVCache(cfg, num_pages=8, page_size=4, pad_to=2)
+    assert kv.buffers["k"].shape[1] == 10  # 8 pool + 1 trash → padded to 10
+    assert kv.trash == 9
+    assert kv.allocator.num_pages == 8
+    kv1 = PagedKVCache(cfg, num_pages=8, page_size=4)
+    assert kv1.buffers["k"].shape[1] == 9 and kv1.trash == 8

@@ -1,0 +1,69 @@
+"""Golden-token regression: a deterministic tiny LM artifact (built by the
+PR-2 compiler in-test) must decode a fixed prompt set to the checked-in
+token streams in ``tests/golden/serving_tokens.json``.
+
+This pins the *whole* pipeline — calibration → int8 LUT quantisation →
+artifact pack/load → table splice → paged continuous-batching decode — so
+a kernel or serving refactor cannot silently change outputs.  If a change
+is *intentionally* supposed to alter tokens, regenerate with::
+
+    REPRO_UPDATE_GOLDEN=1 PYTHONPATH=src python -m pytest \
+        tests/test_serving_golden.py
+
+and commit the diff (reviewers then see the semantic change explicitly).
+"""
+import dataclasses
+import json
+import os
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "serving_tokens.json"
+
+PROMPTS = [[1, 2, 3], [7, 5], [9, 9, 9, 2], [4, 4, 1, 1, 5, 6, 7],
+           list(range(1, 18))]
+MAX_NEW = 8
+
+
+def _decode_streams(tmp_path):
+    from repro.compiler import compile_lm_amm
+    from repro.configs import get_config
+    from repro.models import model as MD
+    from repro.serving import ServeEngine
+
+    cfg = get_config("qwen3-14b", reduced=True)
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, d_ff=128,
+                              vocab_size=64, num_heads=2, num_kv_heads=1,
+                              head_dim=32)
+    cfg = dataclasses.replace(
+        cfg, amm=dataclasses.replace(cfg.amm, enabled=True))  # int8 LUTs
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    calib_tokens = np.random.default_rng(0).integers(0, 64, (4, 16))
+    out = tmp_path / "lm_art"
+    compile_lm_amm(params, cfg, calib_tokens, out=str(out))
+
+    eng = ServeEngine.from_artifact(out, params, cfg, max_batch=2,
+                                    max_len=64, page_size=16,
+                                    prefill_chunk=4)
+    reqs = [eng.submit(p, max_new_tokens=MAX_NEW) for p in PROMPTS]
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    return {",".join(map(str, r.prompt)): r.generated for r in reqs}
+
+
+def test_golden_token_streams(tmp_path):
+    streams = _decode_streams(tmp_path)
+    if os.environ.get("REPRO_UPDATE_GOLDEN") == "1":
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(json.dumps(streams, indent=2) + "\n")
+        pytest.skip(f"regenerated {GOLDEN_PATH}")
+    assert GOLDEN_PATH.is_file(), (
+        f"missing {GOLDEN_PATH}; regenerate with REPRO_UPDATE_GOLDEN=1")
+    golden = json.loads(GOLDEN_PATH.read_text())
+    assert streams == golden, (
+        "token streams drifted from tests/golden/serving_tokens.json — if "
+        "this change is intentional, regenerate with REPRO_UPDATE_GOLDEN=1 "
+        "and commit the diff")
