@@ -1,0 +1,156 @@
+"""Speculative decoding vs plain continuous batching.
+
+The PR-5 acceptance bench: a tiny LM is trained for a few steps on the
+Markov-Zipf ``TokenStream`` (so its logits are peaked the way a real
+served model's are — on random-init weights the argmax is a coin toss
+and no draft can agree with it), compiled into an int8-target / **int4-
+draft** bundle from one calibration pass, then served over the same
+mixed-length request workload by the plain paged ``ServeEngine`` and the
+``SpeculativeEngine`` at several ``k``.
+
+Emitted per batch size: ``spec/plain/...`` and
+``spec/speculative/.../k{K}`` tok/s cells (with the measured acceptance
+rate in ``derived``), plus one ``spec/spec_vs_plain/...`` ratio record
+per (batch, k) — the records ``benchmarks/check_trajectory.py`` gates on
+(speculative must beat plain decode tok/s at the recorded acceptance).
+
+Every speculative stream is also compared token-for-token against the
+plain engine's: a mismatch raises, failing the whole bench module —
+the throughput claim is only meaningful at bit-exactness.
+
+The win regime is dispatch-bound decode (small batch): one fused
+draft+verify dispatch emits ~``acceptance·k + 1`` tokens per request
+where plain decode's dispatch emits one.  At large batch plain decode
+amortises its dispatch over more rows while speculation still pays
+``2(k+1)`` model-steps of compute per round, so the bench pins the
+small-batch cells.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only speculative
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+BATCH = (2,)
+K_VALUES = (2, 4)
+TRAIN_STEPS = 40
+MAX_NEW = 24
+REQUESTS = 8
+# mixed prompt lengths: short chat turns next to long-context requests
+MIX = (2, 5, 9, 14, 20, 3, 12, 7)
+
+
+def _tiny_cfg():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-14b", reduced=True)
+    cfg = dataclasses.replace(
+        cfg,
+        num_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab_size=128,
+        num_heads=2,
+        num_kv_heads=1,
+        head_dim=32,
+    )
+    return dataclasses.replace(
+        cfg, amm=dataclasses.replace(cfg.amm, enabled=True))
+
+
+def _train_tiny(cfg):
+    """A few optimiser steps on the Markov-Zipf stream: enough structure
+    for peaked logits (≈ high draft acceptance), cheap enough for CI."""
+    from repro.data import TokenStream
+    from repro.runtime.steps import init_train_state, make_train_step
+
+    ts = TokenStream(vocab_size=cfg.vocab_size, batch_size=8, seq_len=16)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step_fn = make_train_step(cfg, lambda s: jnp.asarray(5e-3), remat=False)
+    for i in range(TRAIN_STEPS):
+        state, _ = step_fn(state, ts.batch(i))
+    return jax.tree.map(lambda a: a.astype(jnp.float32), state.params), ts
+
+
+def _prompts(ts, n):
+    toks = np.asarray(ts.batch(12345)["tokens"])
+    return [
+        [int(t) for t in toks[i % toks.shape[0], : MIX[i % len(MIX)]]]
+        for i in range(n)
+    ]
+
+
+def _drain(engine, prompts, max_new):
+    for p in prompts:
+        engine.submit(p, max_new_tokens=max_new)
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.generated) for r in done)
+    return n_tok, dt, done
+
+
+def run() -> None:
+    from repro.compiler import compile_lm_bundle
+    from repro.serving import ServeEngine, SpeculativeEngine
+    from repro.serving.engine import _splice_artifact
+
+    cfg = _tiny_cfg()
+    params, ts = _train_tiny(cfg)
+    calib = np.asarray(ts.batch(999)["tokens"])
+    bundle = compile_lm_bundle(params, cfg, calib,
+                               target_resolution="int8",
+                               draft_resolution="int4")
+    params_t, cfg_t = _splice_artifact(bundle.target, params, cfg, None)
+    prompts = _prompts(ts, REQUESTS)
+
+    for batch in BATCH:
+        plain = ServeEngine(params_t, cfg_t, max_batch=batch, max_len=64,
+                            page_size=16, prefill_chunk=8)
+        _drain(plain, prompts[:1], 2)  # warm the compiled programs
+        n_tok, dt, done = _drain(plain, prompts, MAX_NEW)
+        plain_tok = n_tok / max(dt, 1e-9)
+        oracle = {tuple(r.prompt): list(r.generated) for r in done}
+        emit(
+            f"spec/plain/batch{batch}",
+            dt / max(n_tok, 1) * 1e6,
+            f"tok_s={plain_tok:.1f};requests={REQUESTS};max_new={MAX_NEW};"
+            f"mix={'-'.join(map(str, MIX))}",
+        )
+        for k in K_VALUES:
+            spec = SpeculativeEngine.from_artifacts(
+                bundle.target, bundle.draft, params, cfg, spec_k=k,
+                max_batch=batch, max_len=64, page_size=16, prefill_chunk=8)
+            _drain(spec, prompts[:1], 2)
+            n_tok, dt, done = _drain(spec, prompts, MAX_NEW)
+            for r in done:
+                if r.generated != oracle[tuple(r.prompt)]:
+                    raise AssertionError(
+                        f"speculative stream diverged from plain decode for "
+                        f"prompt {r.prompt}: {r.generated} vs "
+                        f"{oracle[tuple(r.prompt)]}")
+            spec_tok = n_tok / max(dt, 1e-9)
+            acc = spec.acceptance_rate
+            emit(
+                f"spec/speculative/batch{batch}/k{k}",
+                dt / max(n_tok, 1) * 1e6,
+                f"tok_s={spec_tok:.1f};acceptance={acc:.3f};"
+                f"tokens_per_round={spec.mean_emitted_per_round:.2f};"
+                f"bitmatch=1",
+            )
+            emit(
+                f"spec/spec_vs_plain/batch{batch}/k{k}",
+                0.0,
+                f"ratio={spec_tok / max(plain_tok, 1e-9):.2f};"
+                f"acceptance={acc:.3f};spec_tok_s={spec_tok:.1f};"
+                f"plain_tok_s={plain_tok:.1f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -9,7 +9,14 @@ Checks, in order:
   3. **the serving claim** — every ``serve/.../paged_vs_fixed/...`` record
      in the new run shows the continuous-batching engine at or above
      ``--min-ratio`` × the fixed-slot engine's tokens/s (default 1.0:
-     paged must not lose to fixed slots on the mixed-length workload).
+     paged must not lose to fixed slots on the mixed-length workload);
+  4. **the speculative claim** — every ``spec/spec_vs_plain/...`` record
+     shows the speculative engine at or above ``--min-spec-ratio`` ×
+     plain decode's tokens/s at its recorded acceptance rate (default
+     1.0: an int4 draft must convert the paper's resolution saving into
+     throughput, not lose it).  Presence is enforced by the coverage
+     check against the committed baseline (``BENCH_PR5.json`` carries
+     the speculative cells), so pre-PR-5 subset runs stay valid.
 
 Absolute µs numbers are *not* compared — CI machines vary too much; the
 trajectory tracks structure and engine-vs-engine ordering, which are
@@ -38,7 +45,8 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def check(baseline: dict, new: dict, min_ratio: float) -> list:
+def check(baseline: dict, new: dict, min_ratio: float,
+          min_spec_ratio: float = 1.0) -> list:
     errors = []
     if not new.get("ok", False):
         errors.append(f"new run not ok: failed={new.get('failed')} "
@@ -60,6 +68,17 @@ def check(baseline: dict, new: dict, min_ratio: float) -> list:
             errors.append(
                 f"{rec['name']}: continuous batching at {ratio:.2f}x fixed "
                 f"slots (< required {min_ratio:.2f}x)")
+    for rec in [r for r in new.get("records", [])
+                if "/spec_vs_plain/" in r["name"]]:
+        d = _parse_derived(rec["derived"])
+        ratio = d.get("ratio")
+        if ratio is None:
+            errors.append(f"{rec['name']}: no ratio in derived")
+        elif ratio < min_spec_ratio:
+            errors.append(
+                f"{rec['name']}: speculative decode at {ratio:.2f}x plain "
+                f"(< required {min_spec_ratio:.2f}x) at acceptance "
+                f"{d.get('acceptance')}")
     return errors
 
 
@@ -69,17 +88,20 @@ def main(argv=None) -> int:
     ap.add_argument("--new", required=True)
     ap.add_argument("--min-ratio", type=float, default=1.0,
                     help="required paged/fixed tokens-per-second ratio")
+    ap.add_argument("--min-spec-ratio", type=float, default=1.0,
+                    help="required speculative/plain tokens-per-second ratio")
     args = ap.parse_args(argv)
 
     baseline = json.loads(Path(args.baseline).read_text())
     new = json.loads(Path(args.new).read_text())
-    errors = check(baseline, new, args.min_ratio)
+    errors = check(baseline, new, args.min_ratio, args.min_spec_ratio)
     if errors:
         for e in errors:
             print(f"[trajectory] FAIL: {e}", file=sys.stderr)
         return 1
     n = len(new.get("records", []))
-    print(f"[trajectory] OK: {n} records, coverage and paged>fixed hold")
+    print(f"[trajectory] OK: {n} records — coverage, paged>fixed and "
+          "spec>plain hold")
     return 0
 
 

@@ -33,10 +33,14 @@ import numpy as np
 from repro.compiler.artifact import (  # noqa: F401
     ARTIFACT_FORMAT,
     ARTIFACT_VERSION,
+    BUNDLE_VERSION,
     Artifact,
     ArtifactError,
     load_artifact,
+    load_bundle,
+    peek_manifest,
     save_artifact,
+    save_bundle,
     tiles_to_json,
 )
 from repro.compiler.calibrate import (  # noqa: F401
@@ -46,6 +50,7 @@ from repro.compiler.calibrate import (  # noqa: F401
     calibrate_chain,
     calibrate_layer,
     calibrate_lm_mlp_layers,
+    calibrate_lm_mlp_layers_float,
 )
 from repro.compiler.planner import LayerPlan, plan_chain  # noqa: F401
 from repro.compiler.quantize import (  # noqa: F401
@@ -186,37 +191,28 @@ def compile_chain(
     return CompileResult(artifact=art, chain=chain, path=path, report=report)
 
 
-def compile_lm_amm(
-    params: dict,
-    cfg,
-    tokens: np.ndarray,
-    *,
-    name: Optional[str] = None,
-    out: Optional[str] = None,
-    mesh_shape: Optional[dict] = None,
-    seed: int = 0,
-) -> CompileResult:
-    """Compile a trained LM's MLP blocks into an ``amm_lm`` artifact.
+def _pack_amm_lm(fitted: list, cfg, resolution: str, name: Optional[str],
+                 mesh_shape: Optional[dict]) -> Artifact:
+    """Per-layer fitted AMM-MLP param dicts → an in-memory ``amm_lm``
+    artifact (shared by :func:`compile_lm_amm` and
+    :func:`compile_lm_bundle`)."""
+    from repro.compiler import quantize as Q
 
-    Captures each layer's real MLP-input activations on ``tokens``, fits
-    the AMM-MLP tables per layer (gate/up share a tree; gate/up LUTs are
-    pruned to the down-encode's split dims per ``cfg.amm``), and packs
-    them.  Load side: ``ServeEngine.from_artifact`` /
-    ``Artifact.splice_lm_params``.
-
-    ``mesh_shape`` (e.g. ``{"data": 2, "model": 4}``) records the serving
-    mesh the artifact is intended for — ``launch/serve.py --mesh auto``
-    reads it back; the engine only warns on mismatch since the sharding
-    rules re-derive placement for any mesh.
-    """
-    fitted = calibrate_lm_mlp_layers(params, cfg, tokens, seed=seed)
     tensors = {}
+    int4_cols = {}
     lut_bytes = 0
     for i, d in enumerate(fitted):
         for k, v in d.items():
             arr = np.asarray(v)
+            is_lut = (k.startswith("lut_") and "scale" not in k
+                      and "offset" not in k)
+            if is_lut and resolution == "int4":
+                # ship two codes per byte (the paper's stored-bits saving);
+                # ``lm_layer_params`` unpacks back to runtime int8 codes
+                int4_cols[f"layer{i}/{k}"] = int(arr.shape[-1])
+                arr = Q.pack_int4(arr)
             tensors[f"layer{i}/{k}"] = arr
-            if k.startswith("lut_") and "scale" not in k and "offset" not in k:
+            if is_lut:
                 lut_bytes += arr.nbytes
     a = cfg.amm
     manifest = {
@@ -226,15 +222,137 @@ def compile_lm_amm(
         "name": name or f"{cfg.name}-amm",
         "arch": cfg.name,
         "platform": jax.default_backend(),
-        "resolution": "int8" if a.quantize_int8 else "float32",
+        "resolution": resolution,
         "num_layers": int(cfg.num_layers),
         "amm": {"d_sub": a.d_sub, "depth": a.depth, "prune": a.prune,
-                "quantize_int8": a.quantize_int8, "backend": a.backend},
+                "quantize_int8": resolution != "float32",
+                "backend": a.backend},
         "resource_report": {"lut_bytes": int(lut_bytes)},
     }
+    if int4_cols:
+        manifest["int4_cols"] = int4_cols
     if mesh_shape is not None:
         manifest["mesh"] = {k: int(v) for k, v in mesh_shape.items()}
-    art = Artifact(manifest=manifest, tensors=tensors)
+    return Artifact(manifest=manifest, tensors=tensors)
+
+
+def compile_lm_amm(
+    params: dict,
+    cfg,
+    tokens: np.ndarray,
+    *,
+    name: Optional[str] = None,
+    out: Optional[str] = None,
+    mesh_shape: Optional[dict] = None,
+    seed: int = 0,
+    resolution: Optional[str] = None,
+) -> CompileResult:
+    """Compile a trained LM's MLP blocks into an ``amm_lm`` artifact.
+
+    Captures each layer's real MLP-input activations on ``tokens``, fits
+    the AMM-MLP tables per layer (gate/up share a tree; gate/up LUTs are
+    pruned to the down-encode's split dims per ``cfg.amm``), quantises
+    them at ``resolution`` (``float32`` / ``int8`` / ``int4``; default:
+    ``cfg.amm.quantize_int8``'s historical meaning), and packs them.
+    Load side: ``ServeEngine.from_artifact`` /
+    ``Artifact.splice_lm_params``.
+
+    ``mesh_shape`` (e.g. ``{"data": 2, "model": 4}``) records the serving
+    mesh the artifact is intended for — ``launch/serve.py --mesh auto``
+    reads it back; the engine only warns on mismatch since the sharding
+    rules re-derive placement for any mesh.
+    """
+    if resolution is None:
+        resolution = "int8" if cfg.amm.quantize_int8 else "float32"
+    fitted = calibrate_lm_mlp_layers(params, cfg, tokens, seed=seed,
+                                     resolution=resolution)
+    art = _pack_amm_lm(fitted, cfg, resolution, name, mesh_shape)
     path = save_artifact(out, art) if out is not None else None
     return CompileResult(artifact=art, chain=None, path=path,
                          report=art.manifest["resource_report"])
+
+
+@dataclasses.dataclass
+class BundleResult:
+    """What one ``compile_lm_bundle`` call produced."""
+
+    target: Artifact              # full-resolution verifier
+    draft: Artifact               # low-resolution proposer
+    manifest: dict                # bundle-level manifest
+    path: Optional[Path]          # bundle dir when ``out`` was given
+    report: dict                  # per-half LUT bytes + draft savings
+
+
+def compile_lm_bundle(
+    params: dict,
+    cfg,
+    tokens: np.ndarray,
+    *,
+    target_resolution: str = "int8",
+    draft_resolution: str = "int4",
+    spec_k: int = 4,
+    name: Optional[str] = None,
+    out: Optional[str] = None,
+    mesh_shape: Optional[dict] = None,
+    seed: int = 0,
+) -> BundleResult:
+    """Compile a target+draft artifact pair from **one** calibration pass.
+
+    The speculative-decoding packaging: each layer's trees / prototypes /
+    float tables are fitted once on the captured activations, then baked
+    at two resolution configs — the full-resolution *target* (the
+    verifier, whose greedy streams define correctness) and a
+    low-resolution *draft* (the proposer; lower entry width = the paper's
+    1.3–2.6× resource saving, converted into throughput at zero accuracy
+    cost because the target verifies every token).  Identical trees mean
+    the draft differs from the target only in LUT entry width, which is
+    what keeps greedy agreement (and so acceptance rates) high.
+
+    Load side: :func:`repro.compiler.artifact.load_bundle` /
+    ``SpeculativeEngine.from_bundle``.
+    """
+    from repro.models.amm_mlp import AMM_RESOLUTIONS, quantize_amm_layer
+
+    for which, res in (("target", target_resolution),
+                       ("draft", draft_resolution)):
+        if res not in AMM_RESOLUTIONS:
+            raise ValueError(f"{which}_resolution must be one of "
+                             f"{AMM_RESOLUTIONS}, got {res!r}")
+    if spec_k < 1:
+        # fail at compile time, not after the serve-side engine rejects
+        # the recorded value post-calibration
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    float_layers = calibrate_lm_mlp_layers_float(params, cfg, tokens,
+                                                 seed=seed)
+    base = name or f"{cfg.name}-spec"
+    target = _pack_amm_lm(
+        [quantize_amm_layer(fp, target_resolution) for fp in float_layers],
+        cfg, target_resolution, f"{base}-target", mesh_shape)
+    draft = _pack_amm_lm(
+        [quantize_amm_layer(fp, draft_resolution) for fp in float_layers],
+        cfg, draft_resolution, f"{base}-draft", mesh_shape)
+    t_bytes = target.manifest["resource_report"]["lut_bytes"]
+    d_bytes = draft.manifest["resource_report"]["lut_bytes"]
+    report = {
+        "target": {"resolution": target_resolution, "lut_bytes": t_bytes},
+        "draft": {"resolution": draft_resolution, "lut_bytes": d_bytes},
+        # stored int4 codes occupy int8 at runtime; count the shipped
+        # information width for the paper-style savings ratio
+        "draft_vs_target_stored": round(t_bytes / max(d_bytes, 1), 3),
+    }
+    manifest = {
+        "format": ARTIFACT_FORMAT,
+        "version": BUNDLE_VERSION,
+        "kind": "bundle",
+        "name": base,
+        "arch": cfg.name,
+        "num_layers": int(cfg.num_layers),
+        "spec_k": int(spec_k),
+        "resource_report": report,
+    }
+    path = None
+    if out is not None:
+        path = save_bundle(out, manifest, target, draft)
+        manifest = peek_manifest(path)  # pick up sub-checksums + defaults
+    return BundleResult(target=target, draft=draft, manifest=manifest,
+                        path=path, report=report)

@@ -80,18 +80,18 @@ def cmd_mlp(args) -> int:
     return 0
 
 
-def cmd_lm(args) -> int:
+def _lm_setup(args):
+    """Shared ``lm`` / ``bundle`` preamble → (cfg, params, tokens,
+    mesh_shape) or an error string."""
     import dataclasses
 
-    from repro.compiler import compile_lm_amm
     from repro.configs import get_config
     from repro.data import TokenStream
     from repro.models import model as MD
 
     cfg = get_config(args.arch, reduced=args.reduced)
     cfg = dataclasses.replace(
-        cfg, amm=dataclasses.replace(cfg.amm, enabled=True,
-                                     quantize_int8=not args.float_luts))
+        cfg, amm=dataclasses.replace(cfg.amm, enabled=True))
     params = MD.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     if args.ckpt:
         from pathlib import Path
@@ -104,25 +104,75 @@ def cmd_lm(args) -> int:
                      seq_len=args.calib_seq)
     tokens = np.asarray(ts.batch(0)["tokens"])
     mesh_shape = None
-    if args.mesh:
+    if getattr(args, "mesh", None):
         from repro.launch.mesh import parse_mesh_spec
         try:
             data, model = parse_mesh_spec(args.mesh)
         except ValueError as e:
-            print(f"--mesh: {e}", file=sys.stderr)
-            return 2
+            return None, f"--mesh: {e}"
         mesh_shape = {"data": data, "model": model}
+    return (cfg, params, tokens, mesh_shape), None
+
+
+def cmd_lm(args) -> int:
+    from repro.compiler import compile_lm_amm
+
+    setup, err = _lm_setup(args)
+    if err:
+        print(err, file=sys.stderr)
+        return 2
+    cfg, params, tokens, mesh_shape = setup
+    resolution = args.resolution
+    if args.float_luts:  # back-compat alias for the pre-resolution flag
+        if resolution is not None and resolution != "float32":
+            print("--float-luts contradicts --resolution "
+                  f"{resolution} — pick one", file=sys.stderr)
+            return 2
+        resolution = "float32"
+    if resolution is None:
+        resolution = "int8"
     print(f"[compiler] capturing MLP inputs for {cfg.num_layers} layers…")
     result = compile_lm_amm(params, cfg, tokens, out=args.out,
-                            mesh_shape=mesh_shape)
-    print(f"[compiler] amm_lm artifact: {result.report['lut_bytes']} LUT "
-          f"bytes → {result.path or '(not saved)'}")
+                            mesh_shape=mesh_shape, resolution=resolution)
+    print(f"[compiler] amm_lm artifact ({result.artifact.resolution}): "
+          f"{result.report['lut_bytes']} LUT bytes → "
+          f"{result.path or '(not saved)'}")
+    return 0
+
+
+def cmd_bundle(args) -> int:
+    from repro.compiler import compile_lm_bundle
+
+    setup, err = _lm_setup(args)
+    if err:
+        print(err, file=sys.stderr)
+        return 2
+    cfg, params, tokens, mesh_shape = setup
+    print(f"[compiler] one calibration pass for {cfg.num_layers} layers, "
+          f"baking target={args.target_resolution} + "
+          f"draft={args.draft_resolution}…")
+    result = compile_lm_bundle(
+        params, cfg, tokens, out=args.out, mesh_shape=mesh_shape,
+        target_resolution=args.target_resolution,
+        draft_resolution=args.draft_resolution, spec_k=args.spec_k)
+    r = result.report
+    print(f"[compiler] bundle: target {r['target']['lut_bytes']} LUT bytes "
+          f"({r['target']['resolution']}), draft {r['draft']['lut_bytes']} "
+          f"({r['draft']['resolution']}), draft ships "
+          f"{r['draft_vs_target_stored']:.2f}x smaller → "
+          f"{result.path or '(not saved)'}")
     return 0
 
 
 def cmd_inspect(args) -> int:
-    from repro.compiler import load_artifact
+    from repro.compiler import load_artifact, peek_manifest
 
+    if peek_manifest(args.path).get("kind") == "bundle":
+        from repro.compiler import load_bundle
+
+        _, _, manifest = load_bundle(args.path)
+        print(json.dumps(manifest, indent=2))
+        return 0
     art = load_artifact(args.path)
     m = dict(art.manifest)
     m.pop("resource_report", None)
@@ -132,8 +182,16 @@ def cmd_inspect(args) -> int:
 
 
 def cmd_verify(args) -> int:
-    from repro.compiler import load_artifact
+    from repro.compiler import load_artifact, peek_manifest
 
+    if peek_manifest(args.path).get("kind") == "bundle":
+        from repro.compiler import load_bundle
+
+        target, draft, _ = load_bundle(args.path)  # full validation
+        print(f"[compiler] {args.path}: bundle "
+              f"(target={target.resolution}, draft={draft.resolution}) — "
+              "manifests/checksums OK")
+        return 0
     art = load_artifact(args.path)  # checksum + schema validation happens here
     print(f"[compiler] {args.path}: kind={art.kind} "
           f"resolution={art.resolution} — manifest/checksum OK")
@@ -177,12 +235,39 @@ def main(argv=None) -> int:
     lm.add_argument("--ckpt")
     lm.add_argument("--calib-batch", type=int, default=8)
     lm.add_argument("--calib-seq", type=int, default=32)
-    lm.add_argument("--float-luts", action="store_true")
+    lm.add_argument("--resolution", default=None,
+                    choices=("float32", "int8", "int4"),
+                    help="LUT entry width baked into the artifact "
+                         "(default int8)")
+    lm.add_argument("--float-luts", action="store_true",
+                    help="deprecated alias of --resolution float32")
     lm.add_argument("--mesh",
                     help="intended serving mesh 'DxM' (data x model), "
                          "recorded in the manifest for --mesh auto serving")
     lm.add_argument("--out")
     lm.set_defaults(fn=cmd_lm)
+
+    bd = sub.add_parser(
+        "bundle",
+        help="compile a target+draft artifact pair for speculative decoding")
+    bd.add_argument("--arch", required=True)
+    bd.add_argument("--reduced", action="store_true")
+    bd.add_argument("--ckpt")
+    bd.add_argument("--calib-batch", type=int, default=8)
+    bd.add_argument("--calib-seq", type=int, default=32)
+    bd.add_argument("--target-resolution", default="int8",
+                    choices=("float32", "int8", "int4"),
+                    help="verifier LUT width (defines the served streams)")
+    bd.add_argument("--draft-resolution", default="int4",
+                    choices=("float32", "int8", "int4"),
+                    help="proposer LUT width (cheaper = the throughput win)")
+    bd.add_argument("--spec-k", type=int, default=4,
+                    help="suggested draft tokens per verify step, recorded "
+                         "in the bundle manifest")
+    bd.add_argument("--mesh",
+                    help="intended serving mesh, recorded in both halves")
+    bd.add_argument("--out")
+    bd.set_defaults(fn=cmd_bundle)
 
     ins = sub.add_parser("inspect", help="print an artifact's manifest")
     ins.add_argument("path")

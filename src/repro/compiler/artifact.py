@@ -45,8 +45,14 @@ from repro.kernels import autotune as AT
 
 ARTIFACT_FORMAT = "repro-lutmu-artifact"
 ARTIFACT_VERSION = 1
+# The ``bundle`` kind (a target+draft artifact pair for speculative
+# decoding) is versioned independently of the tensor-artifact schema: a
+# bundle directory holds its own manifest plus two complete sub-artifacts.
+BUNDLE_VERSION = 1
 _TENSORS_FILE = "tensors.npz"
 _MANIFEST_FILE = "manifest.json"
+_BUNDLE_TARGET_DIR = "target"
+_BUNDLE_DRAFT_DIR = "draft"
 
 
 class ArtifactError(ValueError):
@@ -134,15 +140,26 @@ class Artifact:
             backends=backends)
 
     def lm_layer_params(self) -> List[dict]:
-        """Per-transformer-layer AMM-MLP param dicts (kind ``amm_lm``)."""
+        """Per-transformer-layer AMM-MLP param dicts (kind ``amm_lm``).
+
+        int4 artifacts store their LUTs packed two-codes-per-byte (the
+        manifest's ``int4_cols`` records each table's true column count);
+        they are unpacked here to the runtime's int8 codes in ``[-8, 7]``.
+        """
         if self.kind != "amm_lm":
             raise ArtifactError(f"kind {self.kind!r} is not an amm_lm")
+        int4_cols = self.manifest.get("int4_cols", {})
         out = []
         for i in range(self.manifest["num_layers"]):
             prefix = f"layer{i}/"
-            out.append({k[len(prefix):]: jnp.asarray(v)
-                        for k, v in self.tensors.items()
-                        if k.startswith(prefix)})
+            layer = {}
+            for k, v in self.tensors.items():
+                if not k.startswith(prefix):
+                    continue
+                if k in int4_cols:
+                    v = Q.unpack_int4(v, int4_cols[k])
+                layer[k[len(prefix):]] = jnp.asarray(v)
+            out.append(layer)
         return out
 
     def splice_lm_params(self, params: dict) -> dict:
@@ -200,6 +217,11 @@ def load_artifact(directory) -> Artifact:
     if manifest.get("format") != ARTIFACT_FORMAT:
         raise ArtifactError(
             f"not a {ARTIFACT_FORMAT} (format={manifest.get('format')!r})")
+    if manifest.get("kind") == "bundle":
+        raise ArtifactError(
+            f"{path} is a target+draft bundle — load it with load_bundle() "
+            "(or serve it with SpeculativeEngine.from_bundle / its target/ "
+            "sub-artifact with ServeEngine.from_artifact)")
     if manifest.get("version") != ARTIFACT_VERSION:
         raise ArtifactError(
             f"artifact version {manifest.get('version')!r} != supported "
@@ -244,3 +266,113 @@ def _validate_schema(art: Artifact, path: Path) -> None:
 
 def tiles_to_json(tiles: Optional[AT.TileConfig]) -> Optional[dict]:
     return None if tiles is None else tiles.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# Bundles: a target+draft artifact pair for speculative decoding.
+# ---------------------------------------------------------------------------
+
+
+def peek_manifest(directory) -> dict:
+    """Read a directory's manifest without tensor validation.
+
+    Cheap kind/metadata sniffing (e.g. ``launch/serve.py`` deciding between
+    an ``amm_lm`` artifact and a bundle) — callers that will actually serve
+    the tensors must still go through :func:`load_artifact` /
+    :func:`load_bundle` for checksum + schema validation.
+    """
+    mf = Path(directory) / _MANIFEST_FILE
+    if not mf.is_file():
+        raise ArtifactError(f"no {_MANIFEST_FILE} in {directory}")
+    try:
+        manifest = json.loads(mf.read_text())
+    except ValueError as e:
+        raise ArtifactError(f"corrupt manifest in {directory}: {e}") from e
+    if manifest.get("format") != ARTIFACT_FORMAT:
+        raise ArtifactError(
+            f"not a {ARTIFACT_FORMAT} (format={manifest.get('format')!r})")
+    return manifest
+
+
+def save_bundle(directory, manifest: dict, target: Artifact,
+                draft: Artifact) -> Path:
+    """Atomically write a speculative-decoding bundle.
+
+    Layout::
+
+        <directory>/manifest.json   kind="bundle" + sub-artifact records
+        <directory>/target/         a complete amm_lm artifact
+        <directory>/draft/          a complete amm_lm artifact
+
+    The bundle manifest records each sub-artifact's resolution and tensor
+    checksum so :func:`load_bundle` can detect a target/draft swapped or
+    replaced behind the manifest's back.
+    """
+    final = Path(directory)
+    tmp = final.with_name(final.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    save_artifact(tmp / _BUNDLE_TARGET_DIR, target)
+    save_artifact(tmp / _BUNDLE_DRAFT_DIR, draft)
+    manifest = dict(manifest)
+    manifest.setdefault("format", ARTIFACT_FORMAT)
+    manifest.setdefault("version", BUNDLE_VERSION)
+    manifest["kind"] = "bundle"
+    manifest.setdefault("created_unix", time.time())
+    for key, art in (("target", target), ("draft", draft)):
+        rec = dict(manifest.get(key, {}))
+        rec["path"] = {"target": _BUNDLE_TARGET_DIR,
+                       "draft": _BUNDLE_DRAFT_DIR}[key]
+        rec["resolution"] = art.resolution
+        rec["tensors_sha256"] = art.manifest["tensors_sha256"]
+        manifest[key] = rec
+    (tmp / _MANIFEST_FILE).write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic commit
+    return final
+
+
+def load_bundle(directory):
+    """Load + validate a bundle → ``(target, draft, manifest)``.
+
+    Both sub-artifacts go through the full :func:`load_artifact` paranoia
+    (format/version/checksum/schema), plus bundle-level checks: recorded
+    sub-checksums match the loaded tensors, both halves are ``amm_lm``
+    artifacts, and they describe the same architecture/geometry (the
+    verify step routes both models through one page table, so a geometry
+    mismatch would corrupt the KV cache rather than merely mispredict).
+    """
+    path = Path(directory)
+    manifest = peek_manifest(path)
+    if manifest.get("kind") != "bundle":
+        raise ArtifactError(
+            f"{path} is kind {manifest.get('kind')!r}, not a bundle")
+    if manifest.get("version") != BUNDLE_VERSION:
+        raise ArtifactError(
+            f"bundle version {manifest.get('version')!r} != supported "
+            f"{BUNDLE_VERSION}")
+    arts = {}
+    for key in ("target", "draft"):
+        rec = manifest.get(key)
+        if not isinstance(rec, dict) or "path" not in rec:
+            raise ArtifactError(f"bundle manifest lacks a {key!r} record "
+                                f"in {path}")
+        art = load_artifact(path / rec["path"])
+        if art.kind != "amm_lm":
+            raise ArtifactError(
+                f"bundle {key} is kind {art.kind!r}, expected amm_lm")
+        if art.manifest.get("tensors_sha256") != rec.get("tensors_sha256"):
+            raise ArtifactError(
+                f"bundle {key} checksum drifted from the bundle manifest in "
+                f"{path} — was the sub-artifact replaced?")
+        arts[key] = art
+    t, d = arts["target"], arts["draft"]
+    for field in ("arch", "num_layers"):
+        if t.manifest.get(field) != d.manifest.get(field):
+            raise ArtifactError(
+                f"bundle halves disagree on {field}: target "
+                f"{t.manifest.get(field)!r} vs draft "
+                f"{d.manifest.get(field)!r}")
+    return t, d, manifest

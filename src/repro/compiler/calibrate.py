@@ -144,14 +144,15 @@ def capture_lm_mlp_inputs(params: dict, cfg, tokens: np.ndarray) -> List[np.ndar
     return [np.asarray(c, np.float64) for c in caps]
 
 
-def calibrate_lm_mlp_layers(params: dict, cfg, tokens: np.ndarray,
-                            seed: int = 0) -> List[dict]:
-    """Fit AMM-MLP params for every transformer layer from live activations.
+def calibrate_lm_mlp_layers_float(params: dict, cfg, tokens: np.ndarray,
+                                  seed: int = 0) -> List[dict]:
+    """Fit **float32** AMM-MLP params for every transformer layer.
 
-    Each layer is fitted by ``models.amm_mlp.fit_from_dense`` (the canonical
-    single-layer gate/up/down fit) on the activations *that layer* actually
-    receives, captured with :func:`capture_lm_mlp_inputs`.  Returns one
-    param dict per layer, keyed per ``amm_mlp_param_shapes``.
+    The resolution-independent calibration pass: trees/prototypes/float
+    tables per layer, from the activations each layer actually receives.
+    ``models.amm_mlp.quantize_amm_layer`` bakes these at any resolution
+    config — the bundle compiler quantises one such pass twice (target +
+    draft) so both models share identical trees.
     """
     from repro.models import amm_mlp as AMM
 
@@ -159,8 +160,28 @@ def calibrate_lm_mlp_layers(params: dict, cfg, tokens: np.ndarray,
     fitted = []
     for l, acts in enumerate(caps):
         lp = jax.tree.map(lambda a: a[l], params["layers"])
-        fitted.append(AMM.fit_from_dense(
+        fitted.append(AMM.fit_from_dense_float(
             acts, np.asarray(lp["mlp"]["w_gate"]),
             np.asarray(lp["mlp"]["w_up"]), np.asarray(lp["mlp"]["w_down"]),
             cfg, seed=seed + l))
     return fitted
+
+
+def calibrate_lm_mlp_layers(params: dict, cfg, tokens: np.ndarray,
+                            seed: int = 0,
+                            resolution: Optional[str] = None) -> List[dict]:
+    """Fit AMM-MLP params for every transformer layer from live activations.
+
+    Each layer is fitted by the canonical single-layer gate/up/down fit on
+    the activations *that layer* actually receives, captured with
+    :func:`capture_lm_mlp_inputs`, then quantised at ``resolution``
+    (default: ``cfg.amm.quantize_int8``'s historical meaning).  Returns one
+    param dict per layer, keyed per ``amm_mlp_param_shapes``.
+    """
+    from repro.models import amm_mlp as AMM
+
+    if resolution is None:
+        resolution = "int8" if cfg.amm.quantize_int8 else "float32"
+    return [AMM.quantize_amm_layer(fp, resolution)
+            for fp in calibrate_lm_mlp_layers_float(params, cfg, tokens,
+                                                    seed=seed)]

@@ -284,6 +284,45 @@ def learn_prototypes(
     return jnp.asarray(sol.reshape(c_books, g, d), dtype=jnp.float32)
 
 
+def quantize_lut_bits(
+    lut: Array,
+    bits: int = 8,
+    bias: Optional[Array] = None,
+) -> Tuple[Array, Array, Array]:
+    """Quantise a float (C, G, N) LUT to ``bits``-wide integer codes.
+
+    The MADDNESS quantisation scheme, generalised to any entry width:
+    per-(c, n) offsets (min over prototypes) absorbed into a single
+    per-column offset, a shared per-column scale covering the widest
+    codebook's range, and codes stored as int8 (int4 codes live in
+    ``[-8, 7]``).  ``bits=8`` reproduces the historical int8 path of
+    :func:`build_lut` bit-for-bit — the resolution-config compiler relies
+    on that to quantise one float calibration at several resolutions
+    without changing existing artifacts.
+
+    Every step is per-column separable, so quantisation commutes with
+    column pruning (``pruning.prune_lut``) exactly.
+
+    Returns:
+      (q, scale, offset): int8 codes plus per-column (N,) float32
+      scale/offset such that ``out ≈ (Σ_c q[c, g_c]) · scale + offset``.
+    """
+    if bits not in (4, 8):
+        raise ValueError(f"LUT codes must be 4 or 8 bits, got {bits}")
+    c_books = lut.shape[0]
+    levels = 2**bits
+    half = levels // 2
+    mins = lut.min(axis=1)  # (C, N)
+    rng = (lut.max(axis=1) - mins).max(axis=0)  # (N,)
+    scale = jnp.maximum(rng, 1e-8) / (levels - 1.0)
+    q = jnp.round((lut - mins[:, None, :]) / scale) - float(half)
+    q = jnp.clip(q, -half, half - 1).astype(jnp.int8)
+    offset = mins.sum(axis=0) + float(half) * c_books * scale
+    if bias is not None:
+        offset = offset + bias
+    return q, scale.astype(jnp.float32), offset.astype(jnp.float32)
+
+
 def build_lut(
     prototypes: Array,
     weight: Array,
@@ -317,18 +356,7 @@ def build_lut(
     if not quantize_int8:
         offset = bias if bias is not None else jnp.zeros((n,), jnp.float32)
         return lut.astype(jnp.float32), jnp.ones((), jnp.float32), offset
-
-    # MADDNESS-style quantisation: per-(c, n) offsets (min over prototypes)
-    # absorbed into a single per-column offset; shared per-column scale.
-    mins = lut.min(axis=1)  # (C, N)
-    rng = (lut.max(axis=1) - mins).max(axis=0)  # (N,)
-    scale = jnp.maximum(rng, 1e-8) / 255.0
-    q = jnp.round((lut - mins[:, None, :]) / scale) - 128.0
-    q = jnp.clip(q, -128, 127).astype(jnp.int8)
-    offset = mins.sum(axis=0) + 128.0 * c_books * scale
-    if bias is not None:
-        offset = offset + bias
-    return q, scale.astype(jnp.float32), offset.astype(jnp.float32)
+    return quantize_lut_bits(lut, bits=8, bias=bias)
 
 
 def fit_maddness(

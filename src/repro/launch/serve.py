@@ -12,12 +12,19 @@ Examples:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
       --requests 3 --mesh 2x2
+
+  # speculative decoding from a compiled target+draft bundle
+  PYTHONPATH=src python -m repro.compiler bundle --arch qwen3-14b \
+      --reduced --out /tmp/lm_bundle
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
+      --artifact /tmp/lm_bundle --speculative --spec-k 3
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +33,15 @@ from repro.configs import ARCH_IDS, get_config
 from repro.data import TokenStream
 from repro.launch.mesh import make_serve_mesh
 from repro.models import model as MD
-from repro.serving import FixedSlotEngine, ServeEngine
+from repro.serving import FixedSlotEngine, ServeEngine, SpeculativeEngine
+
+
+def _artifact_kind(path):
+    from repro.compiler.artifact import ArtifactError, peek_manifest
+    try:
+        return peek_manifest(path).get("kind")
+    except (ArtifactError, OSError) as e:
+        raise SystemExit(f"cannot read artifact {path!r}: {e}")
 
 
 def _resolve_mesh(args):
@@ -40,7 +55,10 @@ def _resolve_mesh(args):
                          "the intended mesh)")
     from repro.compiler.artifact import ArtifactError, load_artifact
     try:
-        manifest = load_artifact(args.artifact).manifest
+        art_path = args.artifact
+        if _artifact_kind(art_path) == "bundle":
+            art_path = str(Path(art_path) / "target")
+        manifest = load_artifact(art_path).manifest
     except (ArtifactError, OSError) as e:
         raise SystemExit(f"--mesh auto: cannot load artifact "
                          f"{args.artifact!r}: {e}")
@@ -93,7 +111,20 @@ def main() -> None:
     ap.add_argument("--artifact",
                     help="amm_lm artifact dir from `python -m repro.compiler "
                          "lm` — serve its compiled LUT-MU tables instead of "
-                         "the dense MLPs")
+                         "the dense MLPs.  A bundle dir (`... bundle`) "
+                         "serves its target half, or both halves with "
+                         "--speculative")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-propose / target-verify serving "
+                         "(bit-identical greedy streams).  Needs a bundle "
+                         "--artifact, or compiles one in-process")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens proposed per verify step (default: "
+                         "the bundle manifest's recorded value, else 4)")
+    ap.add_argument("--draft-resolution", default="int4",
+                    choices=("float32", "int8", "int4"),
+                    help="draft LUT width for the in-process bundle compile "
+                         "(--speculative without a bundle --artifact)")
     ap.add_argument("--mesh",
                     help="serve sharded on a 'DxM' (data x model) mesh, or "
                          "'auto' to use the mesh recorded in the --artifact "
@@ -114,7 +145,6 @@ def main() -> None:
     params = MD.init_params(cfg, key, dtype,
                             serving=args.amm and not args.artifact)
     if args.ckpt:
-        from pathlib import Path
         from repro.checkpoint import restore_into
         template = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
@@ -123,6 +153,7 @@ def main() -> None:
     max_batch = args.max_batch or args.slots
     use_paged = (args.engine or
                  ("paged" if MD.supports_paged(cfg) else "fixed")) == "paged"
+    art_kind = _artifact_kind(args.artifact) if args.artifact else None
     if use_paged:
         cls = ServeEngine
         kwargs = dict(max_batch=max_batch, max_len=args.max_len,
@@ -134,7 +165,49 @@ def main() -> None:
         cls = FixedSlotEngine
         kwargs = dict(slots=max_batch, max_len=args.max_len,
                       compute_dtype=dtype, mesh=mesh)
-    if args.artifact:
+
+    if args.speculative:
+        if not use_paged:
+            raise SystemExit("--speculative needs the paged engine (family "
+                             "with paged KV, --engine paged)")
+        if mesh is not None:
+            raise SystemExit("--speculative serving is single-device for "
+                             "now (mesh support is a ROADMAP open item)")
+        if args.spec_k is not None:
+            kwargs["spec_k"] = args.spec_k
+        if art_kind == "bundle":
+            engine = SpeculativeEngine.from_bundle(args.artifact, params,
+                                                   cfg, **kwargs)
+        elif art_kind is not None:
+            raise SystemExit(
+                f"--speculative needs a target+draft bundle artifact, got "
+                f"kind {art_kind!r} — compile one with `python -m "
+                "repro.compiler bundle`")
+        else:
+            if args.amm:
+                raise SystemExit("--speculative without an artifact "
+                                 "calibrates from the dense MLPs — drop "
+                                 "--amm (the compiled bundle IS the LUT-MU "
+                                 "path)")
+            from repro.compiler import compile_lm_bundle
+            kwargs.setdefault("spec_k", 4)
+            calib = TokenStream(vocab_size=cfg.vocab_size, batch_size=8,
+                                seq_len=32)
+            print(f"[serve] compiling in-process bundle (target=int8, "
+                  f"draft={args.draft_resolution})…")
+            res = compile_lm_bundle(
+                params, cfg, calib.batch(0)["tokens"],
+                target_resolution="int8",
+                draft_resolution=args.draft_resolution,
+                spec_k=kwargs["spec_k"])
+            engine = SpeculativeEngine.from_artifacts(
+                res.target, res.draft, params, cfg, **kwargs)
+    elif art_kind == "bundle":
+        # plain serving of a bundle = its full-resolution target half (the
+        # stream-defining model — and the speculative differential oracle)
+        engine = cls.from_artifact(Path(args.artifact) / "target", params,
+                                   cfg, **kwargs)
+    elif args.artifact:
         engine = cls.from_artifact(args.artifact, params, cfg, **kwargs)
     else:
         engine = cls(params, cfg, **kwargs)
@@ -148,6 +221,10 @@ def main() -> None:
     n_tok = sum(len(r.generated) for r in done)
     print(f"{len(done)} requests, {n_tok} tokens, {dt:.1f}s "
           f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
+    if args.speculative:
+        print(f"[spec] k={engine.spec_k} rounds={engine.stats['rounds']} "
+              f"acceptance={engine.acceptance_rate:.3f} "
+              f"tokens/round={engine.mean_emitted_per_round:.2f}")
     for r in done:
         print(f"  req {r.uid}: {r.prompt} → {r.generated}")
 

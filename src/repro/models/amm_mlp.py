@@ -134,9 +134,24 @@ def amm_mlp_apply(params: dict, x: Array, cfg: ModelConfig,
     return out.reshape(b, s, d).astype(x.dtype)
 
 
-def fit_from_dense(calib_x: np.ndarray, w_gate: np.ndarray, w_up: np.ndarray,
-                   w_down: np.ndarray, cfg: ModelConfig, seed: int = 0) -> dict:
-    """Offline-fit real AMM-MLP params from calibration activations."""
+# Resolution configs the amm_lm runtime can serve: float32 tables go
+# through the float contraction, int8 through the integer-accumulation
+# path, and int4 codes are stored as int8 in [-8, 7] (same runtime path,
+# quarter the information — the speculative-decoding draft setting).
+AMM_RESOLUTIONS = ("float32", "int8", "int4")
+
+
+def fit_from_dense_float(calib_x: np.ndarray, w_gate: np.ndarray,
+                         w_up: np.ndarray, w_down: np.ndarray,
+                         cfg: ModelConfig, seed: int = 0) -> dict:
+    """Fit one layer's AMM-MLP params with **float32** LUTs.
+
+    The resolution-independent half of the offline fit: trees, prototypes
+    and pruned float tables.  :func:`quantize_amm_layer` then bakes the
+    tables at any entry width — so one calibration pass can produce e.g.
+    an int8 target and an int4 draft with identical trees (the bundle
+    compiler's contract).
+    """
     a = cfg.amm
     d, ff = w_gate.shape
     c_up, c_down = d // a.d_sub, ff // a.d_sub
@@ -154,7 +169,7 @@ def fit_from_dense(calib_x: np.ndarray, w_gate: np.ndarray, w_up: np.ndarray,
 
     def build(protos_, w, tree_consumer_plan):
         lut, scale, offset = M.build_lut(
-            protos_, jnp.asarray(w, jnp.float32), quantize_int8=a.quantize_int8)
+            protos_, jnp.asarray(w, jnp.float32), quantize_int8=False)
         if tree_consumer_plan is not None:
             lut, offset = P.prune_lut(lut, offset, tree_consumer_plan)
             if scale.ndim:
@@ -176,3 +191,43 @@ def fit_from_dense(calib_x: np.ndarray, w_gate: np.ndarray, w_up: np.ndarray,
         "down_thresholds": down_tree.thresholds,
         "lut_down": lut_d, "lut_down_scale": sd_, "lut_down_offset": od,
     }
+
+
+def quantize_amm_layer(float_params: dict, resolution: str) -> dict:
+    """Bake one layer's float AMM-MLP tables at a resolution config.
+
+    Because the MADDNESS quantisation is per-column separable,
+    quantise-after-prune here equals the historical prune-after-quantise
+    int8 path bit-for-bit (``tests/test_compiler.py`` pins this), so
+    existing int8 artifacts and the serving golden tokens are unchanged.
+    """
+    if resolution not in AMM_RESOLUTIONS:
+        raise ValueError(f"amm_lm resolution must be one of {AMM_RESOLUTIONS},"
+                         f" got {resolution!r} (int16 has no integer LUT "
+                         "runtime path)")
+    if resolution == "float32":
+        return dict(float_params)
+    bits = 8 if resolution == "int8" else 4
+    out = dict(float_params)
+    for proj in ("gate", "up", "down"):
+        q, scale, offset = M.quantize_lut_bits(
+            float_params[f"lut_{proj}"], bits=bits,
+            bias=float_params[f"lut_{proj}_offset"])
+        out[f"lut_{proj}"] = q
+        out[f"lut_{proj}_scale"] = scale
+        out[f"lut_{proj}_offset"] = offset
+    return out
+
+
+def fit_from_dense(calib_x: np.ndarray, w_gate: np.ndarray, w_up: np.ndarray,
+                   w_down: np.ndarray, cfg: ModelConfig, seed: int = 0,
+                   resolution: str = None) -> dict:
+    """Offline-fit real AMM-MLP params from calibration activations.
+
+    ``resolution`` defaults to ``cfg.amm.quantize_int8``'s historical
+    meaning (int8 when True, float32 otherwise).
+    """
+    if resolution is None:
+        resolution = "int8" if cfg.amm.quantize_int8 else "float32"
+    fp = fit_from_dense_float(calib_x, w_gate, w_up, w_down, cfg, seed=seed)
+    return quantize_amm_layer(fp, resolution)

@@ -325,6 +325,7 @@ def decode_step(params: dict, x: Array, cfg: ModelConfig,
 def paged_decode_step(params: dict, x: Array, cfg: ModelConfig,
                       k_pages: Array, v_pages: Array, page_table: Array,
                       pos: Array, window: Optional[Array],
+                      write_ok: Optional[Array] = None,
                       ) -> Tuple[Array, Tuple[Array, Array]]:
     """One-token decode against one layer's **paged** KV cache.
 
@@ -333,6 +334,13 @@ def paged_decode_step(params: dict, x: Array, cfg: ModelConfig,
     int32 logical→physical map, trash-padded; pos: (B,) int32 write index
     per row.  Rows without an active request point their whole page-table
     row at the trash page.
+
+    ``write_ok`` ((B,) bool, optional) redirects a row's K/V write to the
+    trash page — the speculative draft/verify loops use it to mask steps
+    past a row's verify window so out-of-budget positions can never touch
+    a real page (a ``pos // page_size`` past the table's end would
+    otherwise *clamp* onto the row's last real page and corrupt it).
+    ``None`` preserves the historical always-write behaviour bit-exactly.
 
     The new token's K/V is scattered into its physical page, then the
     logical view is gathered (``pages[page_table]`` — a donation-safe jitted
@@ -350,8 +358,11 @@ def paged_decode_step(params: dict, x: Array, cfg: ModelConfig,
     if k_pages.dtype == jnp.int8:
         k, v = _quantize_kv_int8(k, v)
     ps = k_pages.shape[1]
+    trash = k_pages.shape[0] - 1
     rows = jnp.arange(b)
     phys = page_table[rows, pos_b // ps]  # (B,) physical page per row
+    if write_ok is not None:
+        phys = jnp.where(write_ok, phys, trash)
     off = pos_b % ps
     k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))

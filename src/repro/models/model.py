@@ -549,14 +549,18 @@ def decode_step(params: dict, token: Array, pos: Array, cache: dict,
 def paged_decode_step(params: dict, token: Array, pos: Array,
                       page_table: Array, cache: dict, cfg: ModelConfig, *,
                       constrain: Constrain = _id,
-                      compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+                      compute_dtype=jnp.bfloat16,
+                      write_ok: Optional[Array] = None) -> Tuple[Array, dict]:
     """One decode step against the paged KV cache (uniform attention
     stacks only — see :func:`supports_paged`).
 
     token: (B, 1) int32; pos: (B,) int32 per-row write positions;
     page_table: (B, max_pages) int32 logical→physical page map (rows with
     no active request point entirely at the trash page); cache:
-    ``{"k","v"}`` of (L, P, page_size, n_kv, hd).
+    ``{"k","v"}`` of (L, P, page_size, n_kv, hd); write_ok: optional (B,)
+    bool — rows with False scatter their K/V to the trash page (the
+    speculative loops' out-of-window guard; see
+    ``attention.paged_decode_step``).
 
     The per-block math is the same ``rms → attn → rms → mlp`` pipeline as
     :func:`decode_step`'s uniform branch (attention reads through the
@@ -574,7 +578,7 @@ def paged_decode_step(params: dict, token: Array, pos: Array,
         lp, ck, cv, win = xs
         out, (nk, nv) = A.paged_decode_step(
             lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
-            ck, cv, page_table, pos, win)
+            ck, cv, page_table, pos, win, write_ok=write_ok)
         hh = constrain(hh + out, "activation")
         mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
         hh = constrain(hh + _mlp_out(lp, mlp_in, cfg, constrain, cd),
@@ -586,6 +590,87 @@ def paged_decode_step(params: dict, token: Array, pos: Array,
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
     return constrain(logits, "logits"), dict(cache, k=nk, v=nv)
+
+
+def paged_verify_step(params: dict, tokens: Array, pos: Array,
+                      n_valid: Array, page_table: Array, cache: dict,
+                      cfg: ModelConfig, *, constrain: Constrain = _id,
+                      compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+    """Multi-token target step: per-position logits for a whole verify
+    window in **one** compiled program.
+
+    The speculative-decoding verifier: row ``b`` feeds ``tokens[b]``
+    (its last emitted token followed by the draft proposals) at cache
+    positions ``pos[b] .. pos[b]+W-1`` and gets back the greedy target's
+    logits after every prefix.  tokens: (B, W) int32; pos: (B,) int32
+    start positions; n_valid: (B,) int32 — tokens past a row's window
+    scatter to the trash page and their logits are don't-cares.
+
+    Returns ``(logits (B, W, V) f32, updated cache)`` where
+    ``argmax(logits[b, j])`` is the token the target would emit after
+    ``tokens[b, :j+1]``.
+
+    Implementation note: this is ``paged_prefill_chunk`` generalised to a
+    batch of rows at per-row offsets, but deliberately built as a
+    ``lax.scan`` of the **exact** :func:`paged_decode_step` computation
+    rather than one chunk-wide attention: a W-wide masked softmax is
+    mathematically identical to W one-token reads but not *bitwise*
+    identical (different reduction shapes), and the speculative engine's
+    whole contract is that accepted streams bit-match plain decode.  The
+    scan keeps one dispatch per verify window (the throughput win) while
+    making bit-exactness structural rather than numerical luck.
+    """
+    w = tokens.shape[1]
+
+    def body(cache, xs):
+        tok, off = xs  # tok: (B,), off: scalar step index
+        logits, cache = paged_decode_step(
+            params, tok[:, None], pos + off, page_table, cache, cfg,
+            constrain=constrain, compute_dtype=compute_dtype,
+            write_ok=off < n_valid)
+        return cache, logits[:, 0]
+
+    cache, logits = jax.lax.scan(
+        body, cache, (tokens.T, jnp.arange(w, dtype=jnp.int32)))
+    return jnp.swapaxes(logits, 0, 1), cache  # (B, W, V)
+
+
+def paged_draft_loop(params: dict, token: Array, pos: Array, n_valid: Array,
+                     page_table: Array, cache: dict, cfg: ModelConfig,
+                     k: int, *, constrain: Constrain = _id,
+                     compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+    """``k`` greedy draft-model decode steps fused into one compiled
+    program.
+
+    Row ``b`` starts from ``token[b]`` (its last emitted token) at cache
+    position ``pos[b]`` and autoregressively proposes ``k`` tokens,
+    writing the draft model's KV as it goes (masked to the trash page
+    past the row's ``n_valid`` window).  Fusing the loop is where the
+    speculative win comes from at small scale: one dispatch proposes what
+    would otherwise cost ``k`` engine steps.
+
+    The scan runs ``k+1`` steps: the final step is write-only (its
+    proposal is discarded), so the KV of the *last* proposal is in the
+    draft cache too.  Without it, a fully-accepted window would leave the
+    draft cache with a hole at that position — the next round's draft
+    would attend to zeros there, and acceptance would decay even with a
+    perfect draft (an identical draft model must accept at exactly 1.0;
+    ``tests/test_speculative.py`` pins that).
+
+    Returns ``(draft (B, k) int32, updated draft cache)``.
+    """
+    def body(carry, off):
+        tok, cache = carry
+        logits, cache = paged_decode_step(
+            params, tok, pos + off, page_table, cache, cfg,
+            constrain=constrain, compute_dtype=compute_dtype,
+            write_ok=off < n_valid)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return (nxt[:, None], cache), nxt
+
+    (_, cache), toks = jax.lax.scan(
+        body, (token, cache), jnp.arange(k + 1, dtype=jnp.int32))
+    return toks.T[:, :k], cache  # (B, k)
 
 
 def paged_prefill_chunk(params: dict, tokens: Array, start: Array,

@@ -3,3 +3,4 @@ from repro.serving.engine import (FixedSlotEngine, Request,  # noqa: F401
 from repro.serving.kv_cache import (PageAllocator, PagedKVCache,  # noqa: F401
                                     PageError)
 from repro.serving.scheduler import Scheduler, StepPlan  # noqa: F401
+from repro.serving.speculative import SpeculativeEngine  # noqa: F401

@@ -57,13 +57,13 @@ def _shape_tree(tree):
     return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
 
 
-def _artifact_params_cfg(artifact_path, params, cfg: ModelConfig, mesh):
-    """Load an ``amm_lm`` artifact, validate it against ``cfg``, splice its
+def _splice_artifact(art, params, cfg: ModelConfig, mesh):
+    """Validate a loaded ``amm_lm`` artifact against ``cfg``, splice its
     LUT-MU tables into the dense params tree, and enable the AMM path with
-    the artifact's recorded settings (shared by both engines)."""
-    from repro.compiler.artifact import ArtifactError, load_artifact
+    the artifact's recorded settings (shared by every engine — the
+    speculative engine calls it once per bundle half)."""
+    from repro.compiler.artifact import ArtifactError
 
-    art = load_artifact(artifact_path)
     if art.kind != "amm_lm":
         raise ArtifactError(
             f"ServeEngine needs an amm_lm artifact, got {art.kind!r}")
@@ -76,7 +76,10 @@ def _artifact_params_cfg(artifact_path, params, cfg: ModelConfig, mesh):
         raise ArtifactError(
             f"artifact has {art.manifest.get('num_layers')} layers, "
             f"config expects {cfg.num_layers} (reduced vs full?)")
-    d_out = art.tensors["layer0/lut_down"].shape[-1]
+    # int4 artifacts pack two LUT columns per stored byte; the manifest
+    # records the true column count
+    d_out = art.manifest.get("int4_cols", {}).get(
+        "layer0/lut_down", art.tensors["layer0/lut_down"].shape[-1])
     if d_out != cfg.d_model:
         raise ArtifactError(
             f"artifact d_model {d_out} != config d_model {cfg.d_model}")
@@ -90,6 +93,33 @@ def _artifact_params_cfg(artifact_path, params, cfg: ModelConfig, mesh):
             print(f"[serve] note: artifact was compiled for mesh {want}, "
                   f"serving on {have}")
     return art.splice_lm_params(params), cfg
+
+
+def _artifact_params_cfg(artifact_path, params, cfg: ModelConfig, mesh):
+    """Load an ``amm_lm`` artifact from disk and splice it (see
+    :func:`_splice_artifact`)."""
+    from repro.compiler.artifact import load_artifact
+
+    return _splice_artifact(load_artifact(artifact_path), params, cfg, mesh)
+
+
+def _drain(engine, max_steps: int):
+    """Shared ``run_until_drained`` body: step until idle, and raise —
+    rather than silently return a partial result — when the step budget is
+    exhausted with requests still live.  Both engines use the same default
+    budget so a workload that drains on one cannot spuriously stop on the
+    other."""
+    done = []
+    for _ in range(max_steps):
+        done.extend(engine.step())
+        if not engine.has_work:
+            return done
+    live = len(engine.sched.live()) if hasattr(engine, "sched") else (
+        len(engine.queue) + len(engine.active))
+    raise RuntimeError(
+        f"run_until_drained: {max_steps} steps exhausted with {live} "
+        f"request(s) still live ({len(done)} finished) — raise max_steps "
+        "for longer workloads, or investigate a stuck schedule")
 
 
 class ServeEngine:
@@ -221,14 +251,22 @@ class ServeEngine:
         return finished
 
     def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
-        done: List[Request] = []
-        for _ in range(max_steps):
-            done.extend(self.step())
-            if not self.has_work:
-                break
-        return done
+        return _drain(self, max_steps)
 
     # -- internals ---------------------------------------------------------
+    def _prefill_call(self, toks, chunk: SCH.PrefillChunk, page_row):
+        """Run the jitted prefill program(s) for one chunk and return the
+        target logits.  The ONLY prefill behaviour subclasses may change
+        (the speculative engine prefills its draft cache here too) — the
+        chunk bookkeeping around it stays in :meth:`_run_prefill_chunk` so
+        budget/eos fixes cannot drift between engines."""
+        logits, self.kv.buffers = self._prefill(
+            self.params, jnp.asarray(toks),
+            jnp.asarray(chunk.start, jnp.int32),
+            jnp.asarray(chunk.n_valid, jnp.int32),
+            jnp.asarray(page_row), self.kv.buffers)
+        return logits
+
     def _run_prefill_chunk(self, chunk: SCH.PrefillChunk,
                            finished: List[Request]) -> None:
         req = chunk.req
@@ -236,11 +274,7 @@ class ServeEngine:
         toks[0, : chunk.n_valid] = req.prompt[chunk.start:
                                               chunk.start + chunk.n_valid]
         page_row = self.kv.page_row(req.pages, self.max_pages_per_seq)
-        logits, self.kv.buffers = self._prefill(
-            self.params, jnp.asarray(toks),
-            jnp.asarray(chunk.start, jnp.int32),
-            jnp.asarray(chunk.n_valid, jnp.int32),
-            jnp.asarray(page_row), self.kv.buffers)
+        logits = self._prefill_call(toks, chunk, page_row)
         req.pf_done += chunk.n_valid
         if req.pf_done == len(req.prompt):
             req.generated.append(int(jnp.argmax(logits[0, -1])))
@@ -374,6 +408,10 @@ class FixedSlotEngine:
             self.cache = jax.device_put(self.cache, self._cache_sh)
         return finished
 
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
     def step(self) -> List[Request]:
         """One engine iteration: admit, batched decode, retire."""
         finished = self._admit()
@@ -398,13 +436,8 @@ class FixedSlotEngine:
                 del self.active[slot]
         return finished
 
-    def run_until_drained(self, max_steps: int = 1000) -> List[Request]:
-        done: List[Request] = []
-        for _ in range(max_steps):
-            done.extend(self.step())
-            if not self.queue and not self.active:
-                break
-        return done
+    def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
+        return _drain(self, max_steps)
 
 
 def make_engine(params, cfg: ModelConfig, **kwargs):

@@ -106,14 +106,23 @@ class PagedKVCache:
     """
 
     def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
-                 dtype=jnp.float32, pad_to: int = 1):
+                 dtype=jnp.float32, pad_to: int = 1,
+                 allocator: Optional[PageAllocator] = None):
+        """``allocator`` shares another cache's page pool: the speculative
+        engine mirrors its target cache with a draft cache of identical
+        geometry, and one page id must address the same logical slot in
+        both (one page table, one scheduler, two physical pools)."""
         if not MD.supports_paged(cfg):
             raise ValueError(
                 f"family {cfg.family!r} has no paged KV layout")
         self.cfg = cfg
         self.num_pages = num_pages
         self.page_size = page_size
-        self.allocator = PageAllocator(num_pages)
+        if allocator is not None and allocator.num_pages != num_pages:
+            raise ValueError(
+                f"shared allocator manages {allocator.num_pages} pages, "
+                f"mirror cache asked for {num_pages}")
+        self.allocator = allocator or PageAllocator(num_pages)
         # +1 physical page for the trash page, then round the physical
         # count up to a multiple of ``pad_to`` (the engine passes the DP
         # degree) so the page axis actually divides the mesh and the

@@ -65,11 +65,20 @@ class Request:
     pages: List[int] = dataclasses.field(default_factory=list)
     pf_done: int = 0         # prompt tokens already prefilled
     host_kv: Optional[HostKV] = None  # swap-out copy while SWAPPED
+    # speculative-decoding telemetry (filled by SpeculativeEngine)
+    spec_rounds: int = 0     # draft+verify rounds this request took part in
+    spec_proposed: int = 0   # draft tokens offered for verification
+    spec_accepted: int = 0   # draft tokens the target accepted
 
     @property
     def next_pos(self) -> int:
         """Cache index the next decode step writes (= tokens written)."""
         return len(self.prompt) + len(self.generated) - 1
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of verified draft proposals the target accepted."""
+        return self.spec_accepted / max(1, self.spec_proposed)
 
     def budget_reached(self, max_len: int) -> bool:
         last = self.generated[-1] if self.generated else None
@@ -99,13 +108,19 @@ class StepPlan:
 class Scheduler:
     def __init__(self, *, max_batch: int, allocator: PageAllocator,
                  page_size: int, max_pages_per_seq: int, prefill_chunk: int,
-                 max_len: int):
+                 max_len: int, lookahead: int = 1):
         self.max_batch = max_batch
         self.alloc = allocator
         self.page_size = page_size
         self.max_pages_per_seq = max_pages_per_seq
         self.prefill_chunk = prefill_chunk
         self.max_len = max_len
+        # tokens a decode step may write per request: 1 for plain decode,
+        # k+1 for a speculative verify window (page growth must cover the
+        # whole window before the step runs).  Clamped per request by its
+        # remaining budget and max_len, so lookahead never demands more
+        # pages than ``submit`` proved schedulable.
+        self.lookahead = max(1, int(lookahead))
         self.rows: Dict[int, Request] = {}   # row -> PREFILL/RUNNING request
         self.waiting: List[Request] = []
         self.swapped: List[Request] = []
@@ -165,9 +180,13 @@ class Scheduler:
                 [r for r in self.rows.values() if r.state == RUNNING]):
             if req.state != RUNNING:
                 continue  # evicted by an earlier request's page fault
-            if req.next_pos >= len(req.pages) * self.page_size:
-                if not self._ensure_page(req, plan):
-                    continue  # swapped itself out
+            # mirrors the speculative engine's verify-window clamp (the
+            # -1: emitted tokens keep prompt+generated <= max_len) so no
+            # page is reserved that the window can never write
+            la = min(self.lookahead, req.max_new_tokens - len(req.generated),
+                     self.max_len - req.next_pos - 1)
+            if not self._ensure_pages(req, req.next_pos + max(la, 1), plan):
+                continue  # swapped itself out
             plan.decode.append((req.row, req))
         plan.decode = [(row, r) for row, r in plan.decode
                        if r.state == RUNNING]
@@ -242,14 +261,16 @@ class Scheduler:
             req.pf_done = 0
             self.waiting.remove(req)
 
-    def _ensure_page(self, req: Request, plan: StepPlan) -> bool:
-        """Grow ``req`` by one page, evicting if the pool is dry.  Returns
-        False when ``req`` had to swap itself out instead."""
-        while True:
+    def _ensure_pages(self, req: Request, n_tokens: int,
+                      plan: StepPlan) -> bool:
+        """Grow ``req`` until its pages cover ``n_tokens`` cache rows,
+        evicting if the pool is dry.  Returns False when ``req`` had to
+        swap itself out instead."""
+        while len(req.pages) * self.page_size < n_tokens:
             pages = self.alloc.alloc(1)
             if pages is not None:
                 req.pages += pages
-                return True
+                continue
             # Requests resumed in THIS plan are not evictable: their host
             # KV copy hasn't been restored yet, so swapping them out again
             # would gather garbage pages (and land them in both swap_in and
@@ -264,6 +285,26 @@ class Scheduler:
                 return False
             self._evict(min(victims, key=lambda r: (r.priority, -r.seq)),
                         plan)
+        return True
+
+    def rollback(self, req: Request) -> int:
+        """Free a running request's trailing pages past its live prefix.
+
+        After a speculative verify step, positions beyond ``next_pos - 1``
+        hold rejected-draft K/V — garbage that the next window's writes
+        always precede any read of, so the pages backing *only* garbage
+        can be returned to the pool immediately (both the target and the
+        draft cache share these page ids).  Keeps ``pages_for(next_pos +
+        1)`` so the next write never faults.  Returns the pages freed.
+        """
+        if req.state != RUNNING or not req.pages:
+            return 0
+        keep = self._pages_for(req.next_pos + 1)
+        extra = req.pages[keep:]
+        if extra:
+            req.pages = req.pages[:keep]
+            self.alloc.free(extra)
+        return len(extra)
 
     def _evict(self, victim: Request, plan: StepPlan) -> None:
         if victim.state == PREFILL:

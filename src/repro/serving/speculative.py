@@ -1,0 +1,273 @@
+"""Speculative decoding: a low-resolution LUT-MU draft proposes, the
+full-resolution target verifies — bit-exact greedy streams, fewer
+sequential steps.
+
+The paper's resolution configs (float32 → int4) trade accuracy for a
+1.3–2.6× resource saving.  Speculative decoding converts that trade into
+**pure throughput**: the cheap low-resolution draft model only *proposes*
+tokens, and every proposal is checked by the full-resolution target, so
+the emitted stream is — by construction, not statistically — identical to
+what the target alone would produce under greedy decoding.
+
+Round structure (one :meth:`SpeculativeEngine.step`):
+
+  1. **draft** — one fused compiled program
+     (``models/model.py::paged_draft_loop``) runs ``k`` greedy decode
+     steps of the draft model over the whole decode batch, writing the
+     draft's own paged KV cache;
+  2. **verify** — one multi-token target step
+     (``models/model.py::paged_verify_step``) feeds each row's last
+     emitted token plus its ``k`` proposals at positions
+     ``next_pos .. next_pos+k`` and returns per-position logits.
+     ``argmax(logits[b, j])`` is exactly the token the target would emit
+     after the first ``j+1`` tokens of the window;
+  3. **accept** — host-side: the longest prefix of proposals matching the
+     target's argmaxes is accepted, plus the target's own next token (the
+     "bonus": a correction on mismatch, a free extra token on full
+     acceptance).  1 to ``k+1`` tokens are emitted per request per round;
+  4. **rollback** — positions past the accepted prefix hold rejected-draft
+     K/V in both caches.  They are *garbage by construction*: the next
+     window starts exactly at the first rejected position and every paged
+     write precedes every read of the same position, so garbage is always
+     overwritten before it can be attended to.  Pages backing only
+     garbage are returned to the pool (``scheduler.Scheduler.rollback``).
+
+Cache architecture: the draft shares the target's dense backbone (same
+attention weights — a bundle differs only in LUT tables), so both KV
+caches have identical geometry.  The engine therefore runs **one**
+scheduler / page allocator / page table and mirrors the physical pools
+(``PagedKVCache(allocator=...)``): page id ``p`` addresses the same
+logical slot in both caches, and admission / chunked prefill / eviction /
+host swap / cancellation all come from the PR-4 machinery unchanged —
+swap simply copies both pools.
+
+Why bit-exactness holds: the verify step is a ``lax.scan`` of the *exact*
+single-token :func:`~repro.models.model.paged_decode_step` computation —
+same shapes, same reduction order — so each accepted token's logits are
+bitwise the ones plain :class:`~repro.serving.engine.ServeEngine` would
+have computed.  The differential suite (``tests/test_speculative.py``)
+pins streams against the plain engine across draft quality, ``k``,
+eviction and cancellation.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServeEngine, _splice_artifact
+from repro.serving.kv_cache import HostKV, PagedKVCache
+from repro.serving.scheduler import Request
+
+# cfg fields that must agree between target and draft: both models route
+# through one page table and one verify window, so KV geometry and the
+# token space are load-bearing (LUT/AMM settings are free to differ —
+# that difference IS the draft).
+_GEOMETRY_FIELDS = ("family", "num_layers", "d_model", "num_heads",
+                    "num_kv_heads", "head_dim", "vocab_size",
+                    "sliding_window", "local_global_ratio", "qk_norm",
+                    "qkv_bias", "rope_theta", "norm_eps")
+
+
+class SpeculativeEngine(ServeEngine):
+    """Continuous-batching serving with draft-propose / target-verify."""
+
+    def __init__(self, params, cfg: ModelConfig, draft_params, *,
+                 draft_cfg: Optional[ModelConfig] = None, spec_k: int = 4,
+                 **kwargs):
+        if kwargs.get("mesh") is not None:
+            raise NotImplementedError(
+                "mesh-parallel speculative serving is an open item (see "
+                "ROADMAP.md) — serve unsharded or use ServeEngine")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        super().__init__(params, cfg, **kwargs)
+        self.spec_k = int(spec_k)
+        self.draft_cfg = draft_cfg if draft_cfg is not None else self.cfg
+        for f in _GEOMETRY_FIELDS:
+            if getattr(self.cfg, f) != getattr(self.draft_cfg, f):
+                raise ValueError(
+                    f"draft/target geometry mismatch on {f!r}: "
+                    f"{getattr(self.draft_cfg, f)!r} vs "
+                    f"{getattr(self.cfg, f)!r}")
+        self.draft_params = draft_params
+        # verify windows write up to k+1 positions per request per step;
+        # the scheduler must grow pages to cover the window up front
+        self.sched.lookahead = self.spec_k + 1
+        # mirror of the target pool: same page ids, the draft model's KV
+        self.kv_draft = PagedKVCache(
+            self.cfg, num_pages=self.kv.num_pages, page_size=self.page_size,
+            dtype=self.cd, allocator=self.kv.allocator)
+        assert self.kv_draft.trash == self.kv.trash
+        self._draft_host: Dict[int, HostKV] = {}  # uid → swapped draft KV
+        # engine-wide telemetry (per-request counters live on Request)
+        self.stats = {"rounds": 0, "proposed": 0, "accepted": 0,
+                      "emitted": 0}
+
+        cfg_t, cfg_d, cd, k = self.cfg, self.draft_cfg, self.cd, self.spec_k
+
+        def _round(pt, pd, token, pos, n_valid, table, cache_t, cache_d):
+            # draft-propose then target-verify chained in ONE compiled
+            # program: the whole round costs a single dispatch, which is
+            # where the tok/s win over one-dispatch-per-token plain decode
+            # comes from in the dispatch-bound regime
+            draft, cache_d = MD.paged_draft_loop(
+                pd, token, pos, n_valid, table, cache_d, cfg_d, k,
+                compute_dtype=cd)
+            window = jnp.concatenate([token, draft], axis=1)  # (B, k+1)
+            logits, cache_t = MD.paged_verify_step(
+                pt, window, pos, n_valid, table, cache_t, cfg_t,
+                compute_dtype=cd)
+            target = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return draft, target, cache_t, cache_d
+
+        def _prefill_pair(pt, pd, tokens, start, n_valid, page_row, ct, cdr):
+            logits, ct = MD.paged_prefill_chunk(
+                pt, tokens, start, n_valid, page_row, ct, cfg_t,
+                compute_dtype=cd)
+            _, cdr = MD.paged_prefill_chunk(
+                pd, tokens, start, n_valid, page_row, cdr, cfg_d,
+                compute_dtype=cd)
+            return logits, ct, cdr
+
+        self._round = jax.jit(_round, donate_argnums=(6, 7))
+        self._prefill_pair = jax.jit(_prefill_pair, donate_argnums=(6, 7))
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_artifacts(cls, target_art, draft_art, params,
+                       cfg: ModelConfig, **kwargs) -> "SpeculativeEngine":
+        """Build from two loaded/in-memory ``amm_lm`` artifacts: both are
+        spliced into the same dense params tree (they share the backbone;
+        only the LUT tables differ)."""
+        mesh = kwargs.get("mesh")
+        params_t, cfg_t = _splice_artifact(target_art, params, cfg, mesh)
+        params_d, cfg_d = _splice_artifact(draft_art, params, cfg, mesh)
+        return cls(params_t, cfg_t, params_d, draft_cfg=cfg_d, **kwargs)
+
+    @classmethod
+    def from_bundle(cls, bundle_path, params, cfg: ModelConfig,
+                    **kwargs) -> "SpeculativeEngine":
+        """Serve a compiled target+draft bundle
+        (``python -m repro.compiler bundle``).  ``spec_k`` defaults to the
+        bundle manifest's recorded suggestion."""
+        from repro.compiler.artifact import load_bundle
+
+        target, draft, manifest = load_bundle(bundle_path)
+        kwargs.setdefault("spec_k", int(manifest.get("spec_k", 4)))
+        return cls.from_artifacts(target, draft, params, cfg, **kwargs)
+
+    # -- telemetry ---------------------------------------------------------
+    @property
+    def acceptance_rate(self) -> float:
+        """Engine-wide fraction of verified proposals accepted so far."""
+        return self.stats["accepted"] / max(1, self.stats["proposed"])
+
+    @property
+    def mean_emitted_per_round(self) -> float:
+        """Tokens emitted per request per draft+verify round (1 .. k+1)."""
+        return self.stats["emitted"] / max(1, self.stats["rounds"])
+
+    # -- API ---------------------------------------------------------------
+    def cancel(self, uid: int) -> bool:
+        ok = super().cancel(uid)
+        if ok:
+            self._draft_host.pop(uid, None)
+        return ok
+
+    def step(self) -> List[Request]:
+        """One engine iteration: swaps (both caches), at most one prefill
+        chunk (both models), one speculative draft+verify round."""
+        plan = self.sched.schedule()
+        for req, old_pages in plan.swap_out:
+            req.host_kv = self.kv.gather_host(old_pages)
+            self._draft_host[req.uid] = self.kv_draft.gather_host(old_pages)
+        for req in plan.swap_in:
+            self.kv.scatter_host(req.host_kv, req.pages)
+            req.host_kv = None
+            host_d = self._draft_host.pop(req.uid, None)
+            if host_d is not None:
+                self.kv_draft.scatter_host(host_d, req.pages)
+
+        finished: List[Request] = []
+        if plan.prefill is not None:
+            self._run_prefill_chunk(plan.prefill, finished)
+        if plan.decode:
+            self._run_spec_round(plan.decode, finished)
+        return finished
+
+    # -- internals ---------------------------------------------------------
+    def _prefill_call(self, toks, chunk, page_row):
+        """Chunked prefill through BOTH models (the draft needs its own KV
+        for the prompt); the chunk bookkeeping is inherited.  The request's
+        first token comes from the target logits — the same computation,
+        on the same arguments, as the plain engine's prefill, so it is
+        bit-identical."""
+        logits, self.kv.buffers, self.kv_draft.buffers = self._prefill_pair(
+            self.params, self.draft_params, jnp.asarray(toks),
+            jnp.asarray(chunk.start, jnp.int32),
+            jnp.asarray(chunk.n_valid, jnp.int32),
+            jnp.asarray(page_row), self.kv.buffers, self.kv_draft.buffers)
+        return logits
+
+    def _run_spec_round(self, decode, finished: List[Request]) -> None:
+        """Draft k proposals (one dispatch), verify k+1 positions (one
+        dispatch), accept the matching prefix + the target's bonus token."""
+        k = self.spec_k
+        token = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        n_valid = np.zeros((self.max_batch,), np.int32)
+        table = np.full((self.max_batch, self.max_pages_per_seq),
+                        self.kv.trash, np.int32)
+        for row, req in decode:
+            token[row, 0] = req.generated[-1]
+            pos[row] = req.next_pos
+            # window size: never verify past the request's token budget or
+            # the engine's max_len (position next_pos+n_valid-1 must stay
+            # a legal cache index AND every emitted token must be one the
+            # plain engine could also have emitted)
+            n_valid[row] = min(
+                k + 1,
+                req.max_new_tokens - len(req.generated),
+                self.max_len - len(req.prompt) - len(req.generated))
+            table[row, : len(req.pages)] = req.pages
+
+        draft, target, self.kv.buffers, self.kv_draft.buffers = self._round(
+            self.params, self.draft_params, jnp.asarray(token),
+            jnp.asarray(pos), jnp.asarray(n_valid), jnp.asarray(table),
+            self.kv.buffers, self.kv_draft.buffers)
+        draft = np.asarray(draft)    # (B, k)   proposals
+        target = np.asarray(target)  # (B, k+1) greedy target tokens
+
+        for row, req in decode:
+            w = int(n_valid[row])
+            # longest accepted prefix: draft[j] must equal what the target
+            # emits after the window's first j+1 tokens
+            a = 0
+            while a < w - 1 and draft[row, a] == target[row, a]:
+                a += 1
+            req.spec_rounds += 1
+            req.spec_proposed += w - 1
+            req.spec_accepted += a
+            self.stats["rounds"] += 1
+            self.stats["proposed"] += w - 1
+            self.stats["accepted"] += a
+            # emit accepted proposals + the target's bonus/correction,
+            # re-checking the budget after every token exactly like the
+            # plain engine's one-token steps (eos truncates the window)
+            for tok in target[row, : a + 1]:
+                req.generated.append(int(tok))
+                self.stats["emitted"] += 1
+                if req.budget_reached(self.max_len):
+                    break
+            if req.budget_reached(self.max_len):
+                self.sched.retire(req)
+                finished.append(req)
+            else:
+                # positions past the new next_pos hold rejected-draft KV
+                # in both caches — free the pages backing only garbage
+                self.sched.rollback(req)
