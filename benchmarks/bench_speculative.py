@@ -12,7 +12,12 @@ Emitted per batch size: ``spec/plain/...`` and
 ``spec/speculative/.../k{K}`` tok/s cells (with the measured acceptance
 rate in ``derived``), plus one ``spec/spec_vs_plain/...`` ratio record
 per (batch, k) — the records ``benchmarks/check_trajectory.py`` gates on
-(speculative must beat plain decode tok/s at the recorded acceptance).
+(speculative must beat plain decode tok/s at the recorded acceptance) —
+and one ``spec/spec_sampling/.../k{K}`` cell per (batch, k): the same
+workload decoded at ``temperature=0.8, top_k=16`` through the
+rejection-sampling acceptance path, with its (lower) acceptance rate in
+``derived``.  The trajectory gate requires that cell to exist and carry
+a numeric acceptance in ``[0, 1]`` whenever speculative records exist.
 
 Every speculative stream is also compared token-for-token against the
 plain engine's: a mismatch raises, failing the whole bench module —
@@ -85,9 +90,13 @@ def _prompts(ts, n):
     ]
 
 
-def _drain(engine, prompts, max_new):
-    for p in prompts:
-        engine.submit(p, max_new_tokens=max_new)
+def _drain(engine, prompts, max_new, sampling=None):
+    for i, p in enumerate(prompts):
+        sp = None
+        if sampling is not None:
+            # one independent stream per request, deterministic per cell
+            sp = dataclasses.replace(sampling, seed=sampling.seed + i)
+        engine.submit(p, max_new_tokens=max_new, sampling=sp)
     t0 = time.perf_counter()
     done = engine.run_until_drained()
     dt = time.perf_counter() - t0
@@ -97,7 +106,7 @@ def _drain(engine, prompts, max_new):
 
 def run() -> None:
     from repro.compiler import compile_lm_bundle
-    from repro.serving import ServeEngine, SpeculativeEngine
+    from repro.serving import SamplingParams, ServeEngine, SpeculativeEngine
     from repro.serving.engine import _splice_artifact
 
     cfg = _tiny_cfg()
@@ -149,6 +158,26 @@ def run() -> None:
                 f"ratio={spec_tok / max(plain_tok, 1e-9):.2f};"
                 f"acceptance={acc:.3f};spec_tok_s={spec_tok:.1f};"
                 f"plain_tok_s={plain_tok:.1f}",
+            )
+
+            # Sampled speculation: rejection-sampling correction at T>0.
+            # Acceptance is the quantity of interest here — it drops below
+            # the greedy rate (the draft proposes from q, the target accepts
+            # with min(1, p/q)), and check_trajectory.py requires the cell
+            # to exist and carry a sane acceptance once spec records exist.
+            sp = SamplingParams(temperature=0.8, top_k=16, seed=0)
+            spec_s = SpeculativeEngine.from_artifacts(
+                bundle.target, bundle.draft, params, cfg, spec_k=k,
+                max_batch=batch, max_len=64, page_size=16, prefill_chunk=8)
+            _drain(spec_s, prompts[:1], 2, sampling=sp)
+            n_tok, dt, _ = _drain(spec_s, prompts, MAX_NEW, sampling=sp)
+            emit(
+                f"spec/spec_sampling/batch{batch}/k{k}",
+                dt / max(n_tok, 1) * 1e6,
+                f"tok_s={n_tok / max(dt, 1e-9):.1f};"
+                f"acceptance={spec_s.acceptance_rate:.3f};"
+                f"temperature={sp.temperature};top_k={sp.top_k};"
+                f"seed={sp.seed}",
             )
 
 

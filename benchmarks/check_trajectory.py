@@ -16,7 +16,12 @@ Checks, in order:
      1.0: an int4 draft must convert the paper's resolution saving into
      throughput, not lose it).  Presence is enforced by the coverage
      check against the committed baseline (``BENCH_PR5.json`` carries
-     the speculative cells), so pre-PR-5 subset runs stay valid.
+     the speculative cells), so pre-PR-5 subset runs stay valid;
+  5. **the sampling claim** — whenever speculative records exist, at
+     least one ``spec/spec_sampling/...`` cell must exist and carry a
+     numeric acceptance rate in ``[0, 1]``: the rejection-sampling
+     acceptance path (PR 6) cannot silently fall out of the measured
+     surface.
 
 Absolute µs numbers are *not* compared — CI machines vary too much; the
 trajectory tracks structure and engine-vs-engine ordering, which are
@@ -79,6 +84,20 @@ def check(baseline: dict, new: dict, min_ratio: float,
                 f"{rec['name']}: speculative decode at {ratio:.2f}x plain "
                 f"(< required {min_spec_ratio:.2f}x) at acceptance "
                 f"{d.get('acceptance')}")
+    spec_plain = [r for r in new.get("records", [])
+                  if "/spec_vs_plain/" in r["name"]]
+    spec_sampling = [r for r in new.get("records", [])
+                     if "/spec_sampling/" in r["name"]]
+    if spec_plain and not spec_sampling:
+        errors.append(
+            "speculative records present but no spec_sampling cell — the "
+            "rejection-sampling acceptance path is unmeasured")
+    for rec in spec_sampling:
+        acc = _parse_derived(rec["derived"]).get("acceptance")
+        if not isinstance(acc, float) or not 0.0 <= acc <= 1.0:
+            errors.append(
+                f"{rec['name']}: acceptance {acc!r} is not a number in "
+                f"[0, 1]")
     return errors
 
 

@@ -33,7 +33,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.data import TokenStream
 from repro.launch.mesh import make_serve_mesh
 from repro.models import model as MD
-from repro.serving import FixedSlotEngine, ServeEngine, SpeculativeEngine
+from repro.serving import (FixedSlotEngine, SamplingParams, ServeEngine,
+                           SpeculativeEngine)
 
 
 def _artifact_kind(path):
@@ -125,6 +126,18 @@ def main() -> None:
                     choices=("float32", "int8", "int4"),
                     help="draft LUT width for the in-process bundle compile "
                          "(--speculative without a bundle --artifact)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 (default) = greedy argmax, "
+                         "bit-identical to the pre-sampling engines")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k most likely tokens (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the minimal probability "
+                         "mass p (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed+i, and a "
+                         "rerun with the same seed reproduces every stream "
+                         "bit-exactly (any engine, any batch size)")
     ap.add_argument("--mesh",
                     help="serve sharded on a 'DxM' (data x model) mesh, or "
                          "'auto' to use the mesh recorded in the --artifact "
@@ -214,7 +227,13 @@ def main() -> None:
     stream = TokenStream(vocab_size=cfg.vocab_size, batch_size=1, seq_len=16)
     for i in range(args.requests):
         prompt = [int(t) for t in stream.batch(i)["tokens"][0][:8]]
-        engine.submit(prompt, max_new_tokens=args.max_new)
+        # per-request seed: streams stay reproducible (and distinct)
+        # however the batch interleaves them
+        engine.submit(prompt, max_new_tokens=args.max_new,
+                      sampling=SamplingParams(temperature=args.temperature,
+                                              top_k=args.top_k,
+                                              top_p=args.top_p,
+                                              seed=args.seed + i))
     t0 = time.time()
     done = engine.run_until_drained()
     dt = time.time() - t0

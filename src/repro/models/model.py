@@ -637,10 +637,10 @@ def paged_verify_step(params: dict, tokens: Array, pos: Array,
 
 def paged_draft_loop(params: dict, token: Array, pos: Array, n_valid: Array,
                      page_table: Array, cache: dict, cfg: ModelConfig,
-                     k: int, *, constrain: Constrain = _id,
-                     compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
-    """``k`` greedy draft-model decode steps fused into one compiled
-    program.
+                     k: int, *, sample=None, constrain: Constrain = _id,
+                     compute_dtype=jnp.bfloat16
+                     ) -> Tuple[Array, Array, dict]:
+    """``k`` draft-model decode steps fused into one compiled program.
 
     Row ``b`` starts from ``token[b]`` (its last emitted token) at cache
     position ``pos[b]`` and autoregressively proposes ``k`` tokens,
@@ -648,6 +648,14 @@ def paged_draft_loop(params: dict, token: Array, pos: Array, n_valid: Array,
     past the row's ``n_valid`` window).  Fusing the loop is where the
     speculative win comes from at small scale: one dispatch proposes what
     would otherwise cost ``k`` engine steps.
+
+    ``sample``: optional ``(logits (B, V), off) -> (next (B,) int32,
+    probs (B, V))`` callback drawing each proposal and reporting the
+    distribution it was drawn from (the speculative engine passes the
+    serving stack's per-request sampler; the rejection-sampling
+    correction needs exactly the ``q`` each proposal came from).  The
+    default is greedy argmax with a one-hot ``q`` — the same thing the
+    T=0 sampler computes, so greedy is one code path, not two.
 
     The scan runs ``k+1`` steps: the final step is write-only (its
     proposal is discarded), so the KV of the *last* proposal is in the
@@ -657,20 +665,26 @@ def paged_draft_loop(params: dict, token: Array, pos: Array, n_valid: Array,
     perfect draft (an identical draft model must accept at exactly 1.0;
     ``tests/test_speculative.py`` pins that).
 
-    Returns ``(draft (B, k) int32, updated draft cache)``.
+    Returns ``(draft (B, k) int32, q (B, k, V), updated draft cache)``.
     """
+    if sample is None:
+        def sample(logits, off):
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, jax.nn.one_hot(nxt, logits.shape[-1],
+                                       dtype=logits.dtype)
+
     def body(carry, off):
         tok, cache = carry
         logits, cache = paged_decode_step(
             params, tok, pos + off, page_table, cache, cfg,
             constrain=constrain, compute_dtype=compute_dtype,
             write_ok=off < n_valid)
-        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-        return (nxt[:, None], cache), nxt
+        nxt, q = sample(logits[:, 0], off)
+        return (nxt[:, None], cache), (nxt, q)
 
-    (_, cache), toks = jax.lax.scan(
+    (_, cache), (toks, qs) = jax.lax.scan(
         body, (token, cache), jnp.arange(k + 1, dtype=jnp.int32))
-    return toks.T[:, :k], cache  # (B, k)
+    return toks.T[:, :k], jnp.swapaxes(qs, 0, 1)[:, :k], cache  # (B, k, ...)
 
 
 def paged_prefill_chunk(params: dict, tokens: Array, start: Array,

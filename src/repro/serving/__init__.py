@@ -2,5 +2,6 @@ from repro.serving.engine import (FixedSlotEngine, Request,  # noqa: F401
                                   ServeEngine, make_engine)
 from repro.serving.kv_cache import (PageAllocator, PagedKVCache,  # noqa: F401
                                     PageError)
+from repro.serving.sampling import SamplingParams  # noqa: F401
 from repro.serving.scheduler import Scheduler, StepPlan  # noqa: F401
 from repro.serving.speculative import SpeculativeEngine  # noqa: F401

@@ -27,6 +27,17 @@ Both engines produce token streams bit-identical to sequential
 one-request-at-a-time decoding; the paged engine additionally guarantees
 this under page-pressure eviction (pages are swapped to host and restored
 bit-exactly) and any admission order.
+
+Both engines also share one per-request stochastic sampler
+(``serving/sampling.py``, routed through :func:`_sample_batch`):
+``submit(..., sampling=SamplingParams(...))`` turns on temperature /
+top-k / top-p sampling with a per-request seed whose stream is
+independent of batch composition and survives eviction + host swap.  The
+default ``SamplingParams()`` is greedy (T=0), which reduces to the
+historical argmax **bit-exactly** — the differential guarantees above are
+the T=0 special case, pinned by ``tests/test_serving_golden.py``; the
+stochastic regime is pinned distributionally by ``tests/test_sampling.py``
+(see docs/sampling.md).
 """
 from __future__ import annotations
 
@@ -46,8 +57,10 @@ from repro.distributed.sharding import (MeshAxes, batch_spec,
                                         param_shardings)
 from repro.models import model as MD
 from repro.models.config import ModelConfig
+from repro.serving import sampling as S
 from repro.serving import scheduler as SCH
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 
 Array = jax.Array
@@ -101,6 +114,19 @@ def _artifact_params_cfg(artifact_path, params, cfg: ModelConfig, mesh):
     from repro.compiler.artifact import load_artifact
 
     return _splice_artifact(load_artifact(artifact_path), params, cfg, mesh)
+
+
+def _sample_batch(logits, rows_reqs, batch: int) -> np.ndarray:
+    """Draw each row's next token through the per-request sampler.
+
+    ``logits (batch, V)`` + ``(row, request)`` pairs → ``(batch,)`` int32
+    on host.  Greedy requests (T=0, the default) reduce to ``argmax``
+    bit-exactly inside the same jitted program; rows not listed default
+    to greedy and their samples are discarded by the caller.  Shared by
+    every engine so sampling semantics cannot drift between them."""
+    seed, t, temp, top_k, top_p = S.batch_rows(rows_reqs, batch)
+    return np.asarray(
+        S.sample_tokens_jit(logits, seed, t, temp, top_k, top_p))
 
 
 def _drain(engine, max_steps: int):
@@ -210,10 +236,12 @@ class ServeEngine:
 
     # -- API -------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               eos_id: Optional[int] = None, priority: int = 0) -> Request:
+               eos_id: Optional[int] = None, priority: int = 0,
+               sampling: Optional[SamplingParams] = None) -> Request:
         req = Request(uid=next(self._uid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
-                      priority=priority)
+                      priority=priority,
+                      sampling=sampling or SamplingParams())
         self.sched.submit(req)
         return req
 
@@ -277,7 +305,8 @@ class ServeEngine:
         logits = self._prefill_call(toks, chunk, page_row)
         req.pf_done += chunk.n_valid
         if req.pf_done == len(req.prompt):
-            req.generated.append(int(jnp.argmax(logits[0, -1])))
+            req.generated.append(
+                int(_sample_batch(logits[0, -1:], [(0, req)], 1)[0]))
             if req.budget_reached(self.max_len):
                 self.sched.retire(req)
                 finished.append(req)
@@ -296,7 +325,7 @@ class ServeEngine:
         logits, self.kv.buffers = self._decode(
             self.params, jnp.asarray(token), jnp.asarray(pos),
             jnp.asarray(table), self.kv.buffers)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        nxt = _sample_batch(logits[:, 0], decode, self.max_batch)
         for row, req in decode:
             req.generated.append(int(nxt[row]))
             if req.budget_reached(self.max_len):
@@ -367,10 +396,12 @@ class FixedSlotEngine:
 
     # -- API -------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               eos_id: Optional[int] = None, priority: int = 0) -> Request:
+               eos_id: Optional[int] = None, priority: int = 0,
+               sampling: Optional[SamplingParams] = None) -> Request:
         del priority  # fixed-slot admission is strictly FIFO
         req = Request(uid=next(self._uid), prompt=list(prompt),
-                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      sampling=sampling or SamplingParams())
         self.queue.append(req)
         return req
 
@@ -393,7 +424,8 @@ class FixedSlotEngine:
                 if one.ndim >= 2 and full.shape[1] == self.slots else full,
                 self.cache, cache1)
             spliced = True
-            req.generated.append(int(jnp.argmax(logits[0, -1])))
+            req.generated.append(
+                int(_sample_batch(logits[0, -1:], [(0, req)], 1)[0]))
             if req.budget_reached(self.max_len):
                 req.done = True
                 finished.append(req)
@@ -423,7 +455,8 @@ class FixedSlotEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(token),
             jnp.asarray(self.pos, jnp.int32), self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        nxt = _sample_batch(logits[:, 0], list(self.active.items()),
+                            self.slots)
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])
             req.generated.append(tok)

@@ -39,6 +39,7 @@ import itertools
 from typing import Dict, List, Optional, Tuple
 
 from repro.serving.kv_cache import HostKV, PageAllocator
+from repro.serving.sampling import SamplingParams
 
 # request states
 WAITING = "waiting"
@@ -55,6 +56,12 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     priority: int = 0
+    # per-request stochastic sampling (default: greedy argmax).  Host-side
+    # config only — the RNG key is never materialised here: every draw is
+    # re-derived from (sampling.seed, len(generated), role) inside the
+    # engine's jitted step (serving/sampling.py), so eviction, host swap
+    # and re-admission carry the stream state for free.
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     # filled by the engine / scheduler
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False

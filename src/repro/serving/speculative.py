@@ -1,6 +1,6 @@
 """Speculative decoding: a low-resolution LUT-MU draft proposes, the
-full-resolution target verifies — bit-exact greedy streams, fewer
-sequential steps.
+full-resolution target verifies — bit-exact greedy streams,
+distribution-exact sampled streams, fewer sequential steps.
 
 The paper's resolution configs (float32 → int4) trade accuracy for a
 1.3–2.6× resource saving.  Speculative decoding converts that trade into
@@ -12,19 +12,29 @@ what the target alone would produce under greedy decoding.
 Round structure (one :meth:`SpeculativeEngine.step`):
 
   1. **draft** — one fused compiled program
-     (``models/model.py::paged_draft_loop``) runs ``k`` greedy decode
-     steps of the draft model over the whole decode batch, writing the
-     draft's own paged KV cache;
+     (``models/model.py::paged_draft_loop``) runs ``k`` decode steps of
+     the draft model over the whole decode batch, each proposal drawn
+     from the draft's *post-transform* sampling distribution ``q``
+     (greedy = the T=0 one-hot special case), writing the draft's own
+     paged KV cache;
   2. **verify** — one multi-token target step
      (``models/model.py::paged_verify_step``) feeds each row's last
      emitted token plus its ``k`` proposals at positions
-     ``next_pos .. next_pos+k`` and returns per-position logits.
-     ``argmax(logits[b, j])`` is exactly the token the target would emit
-     after the first ``j+1`` tokens of the window;
-  3. **accept** — host-side: the longest prefix of proposals matching the
-     target's argmaxes is accepted, plus the target's own next token (the
-     "bonus": a correction on mismatch, a free extra token on full
-     acceptance).  1 to ``k+1`` tokens are emitted per request per round;
+     ``next_pos .. next_pos+k`` and returns per-position logits, from
+     which the target's sampling distribution ``p`` at every window
+     position is computed (``serving/sampling.py::sampling_probs``);
+  3. **accept** — the standard rejection-sampling correction, in the same
+     compiled program (``serving/sampling.py::speculative_accept``):
+     proposal ``x_j`` is accepted with probability ``min(1,
+     p_j(x_j)/q_j(x_j))``; the first rejected position is resampled from
+     the normalised residual ``max(p_j - q_j, 0)``; on full acceptance a
+     bonus token is drawn from ``p`` at the window's last position using
+     the exact RNG stream a plain engine would have used for that
+     emission index.  The emitted tokens are distributed exactly as
+     plain sampling from the target — and at T=0 (one-hot ``p``/``q``)
+     the accept test degenerates *bitwise* to greedy prefix matching,
+     so greedy streams stay bit-identical to the plain engine.  1 to
+     ``k+1`` tokens are emitted per request per round;
   4. **rollback** — positions past the accepted prefix hold rejected-draft
      K/V in both caches.  They are *garbage by construction*: the next
      window starts exactly at the first rejected position and every paged
@@ -45,9 +55,14 @@ Why bit-exactness holds: the verify step is a ``lax.scan`` of the *exact*
 single-token :func:`~repro.models.model.paged_decode_step` computation —
 same shapes, same reduction order — so each accepted token's logits are
 bitwise the ones plain :class:`~repro.serving.engine.ServeEngine` would
-have computed.  The differential suite (``tests/test_speculative.py``)
-pins streams against the plain engine across draft quality, ``k``,
-eviction and cancellation.
+have computed.  On top of that the RNG streams line up by construction:
+every draw is keyed by ``(request seed, emission index, role)``, so the
+bonus token on full acceptance uses exactly the uniform the plain engine
+would have used for that position.  The differential suite
+(``tests/test_speculative.py``) pins greedy streams against the plain
+engine across draft quality, ``k``, eviction and cancellation;
+``tests/test_sampling.py`` + ``tests/dist_check.py`` pin the sampled
+regime distributionally (see docs/sampling.md for the proof sketch).
 """
 from __future__ import annotations
 
@@ -59,6 +74,7 @@ import numpy as np
 
 from repro.models import model as MD
 from repro.models.config import ModelConfig
+from repro.serving import sampling as S
 from repro.serving.engine import ServeEngine, _splice_artifact
 from repro.serving.kv_cache import HostKV, PagedKVCache
 from repro.serving.scheduler import Request
@@ -110,12 +126,44 @@ class SpeculativeEngine(ServeEngine):
 
         cfg_t, cfg_d, cd, k = self.cfg, self.draft_cfg, self.cd, self.spec_k
 
-        def _round(pt, pd, token, pos, n_valid, table, cache_t, cache_d):
-            # draft-propose then target-verify chained in ONE compiled
-            # program: the whole round costs a single dispatch, which is
-            # where the tok/s win over one-dispatch-per-token plain decode
-            # comes from in the dispatch-bound regime
-            draft, cache_d = MD.paged_draft_loop(
+        def _round(pt, pd, token, pos, n_valid, table, seed, t0, temp,
+                   top_k, top_p, cache_t, cache_d):
+            # draft-propose, target-verify and the rejection-sampling
+            # acceptance chained in ONE compiled program: the whole round
+            # costs a single dispatch, which is where the tok/s win over
+            # one-dispatch-per-token plain decode comes from in the
+            # dispatch-bound regime
+            def draft_sample(logits, off):
+                # proposal for emission index t0+off from the draft's own
+                # post-transform distribution, on the ROLE_DRAFT stream
+                # (independent of every target-side draw)
+                q = S.sampling_probs(logits, temp, top_k, top_p)
+                u = S.stream_uniform(seed, t0 + off, S.ROLE_DRAFT)
+                return S.categorical_from_uniform(q, u), q
+
+            draft, q_probs, cache_d = MD.paged_draft_loop(
+                pd, token, pos, n_valid, table, cache_d, cfg_d, k,
+                sample=draft_sample, compute_dtype=cd)
+            window = jnp.concatenate([token, draft], axis=1)  # (B, k+1)
+            logits, cache_t = MD.paged_verify_step(
+                pt, window, pos, n_valid, table, cache_t, cfg_t,
+                compute_dtype=cd)
+            p_probs = S.sampling_probs(logits, temp[:, None],
+                                       top_k[:, None], top_p[:, None])
+            accepted, emit = S.speculative_accept(
+                p_probs, q_probs, draft, seed, t0, n_valid)
+            return accepted, emit, cache_t, cache_d
+
+        def _round_greedy(pt, pd, token, pos, n_valid, table,
+                          cache_t, cache_d):
+            # T=0 fast path, host-selected when EVERY active row is
+            # greedy: skips the sampling transforms, threefry streams and
+            # rejection logic entirely.  Bit-equivalent to `_round` with
+            # one-hot p/q (accept degenerates to prefix matching, the
+            # residual/bonus to the target argmax) — the golden tri-engine
+            # test and the mixed-batch test in tests/test_speculative.py
+            # pin both programs to the same greedy streams.
+            draft, _, cache_d = MD.paged_draft_loop(
                 pd, token, pos, n_valid, table, cache_d, cfg_d, k,
                 compute_dtype=cd)
             window = jnp.concatenate([token, draft], axis=1)  # (B, k+1)
@@ -123,7 +171,11 @@ class SpeculativeEngine(ServeEngine):
                 pt, window, pos, n_valid, table, cache_t, cfg_t,
                 compute_dtype=cd)
             target = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return draft, target, cache_t, cache_d
+            ok = (draft == target[:, :-1]) & (
+                jnp.arange(k)[None, :] < n_valid[:, None] - 1)
+            accepted = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
+                               axis=1)
+            return accepted, target, cache_t, cache_d
 
         def _prefill_pair(pt, pd, tokens, start, n_valid, page_row, ct, cdr):
             logits, ct = MD.paged_prefill_chunk(
@@ -134,7 +186,8 @@ class SpeculativeEngine(ServeEngine):
                 compute_dtype=cd)
             return logits, ct, cdr
 
-        self._round = jax.jit(_round, donate_argnums=(6, 7))
+        self._round = jax.jit(_round, donate_argnums=(11, 12))
+        self._round_greedy = jax.jit(_round_greedy, donate_argnums=(6, 7))
         self._prefill_pair = jax.jit(_prefill_pair, donate_argnums=(6, 7))
 
     # -- construction ------------------------------------------------------
@@ -215,8 +268,8 @@ class SpeculativeEngine(ServeEngine):
         return logits
 
     def _run_spec_round(self, decode, finished: List[Request]) -> None:
-        """Draft k proposals (one dispatch), verify k+1 positions (one
-        dispatch), accept the matching prefix + the target's bonus token."""
+        """Draft k proposals, verify k+1 positions, rejection-sample the
+        accepted prefix + correction/bonus token — all in one dispatch."""
         k = self.spec_k
         token = np.zeros((self.max_batch, 1), np.int32)
         pos = np.zeros((self.max_batch,), np.int32)
@@ -235,31 +288,41 @@ class SpeculativeEngine(ServeEngine):
                 req.max_new_tokens - len(req.generated),
                 self.max_len - len(req.prompt) - len(req.generated))
             table[row, : len(req.pages)] = req.pages
+        seed, t0, temp, top_k, top_p = S.batch_rows(decode, self.max_batch)
 
-        draft, target, self.kv.buffers, self.kv_draft.buffers = self._round(
-            self.params, self.draft_params, jnp.asarray(token),
-            jnp.asarray(pos), jnp.asarray(n_valid), jnp.asarray(table),
-            self.kv.buffers, self.kv_draft.buffers)
-        draft = np.asarray(draft)    # (B, k)   proposals
-        target = np.asarray(target)  # (B, k+1) greedy target tokens
+        if np.all(temp <= 0.0):
+            # all-greedy batch (inactive rows default to T=0): the fast
+            # path skips the sampling machinery — same accepted/emit
+            # contract, bit-identical tokens
+            (accepted, emit, self.kv.buffers,
+             self.kv_draft.buffers) = self._round_greedy(
+                self.params, self.draft_params, jnp.asarray(token),
+                jnp.asarray(pos), jnp.asarray(n_valid), jnp.asarray(table),
+                self.kv.buffers, self.kv_draft.buffers)
+        else:
+            (accepted, emit, self.kv.buffers,
+             self.kv_draft.buffers) = self._round(
+                self.params, self.draft_params, jnp.asarray(token),
+                jnp.asarray(pos), jnp.asarray(n_valid), jnp.asarray(table),
+                jnp.asarray(seed), jnp.asarray(t0), jnp.asarray(temp),
+                jnp.asarray(top_k), jnp.asarray(top_p),
+                self.kv.buffers, self.kv_draft.buffers)
+        accepted = np.asarray(accepted)  # (B,)    accepted-prefix lengths
+        emit = np.asarray(emit)          # (B, k+1) tokens to emit per row
 
         for row, req in decode:
             w = int(n_valid[row])
-            # longest accepted prefix: draft[j] must equal what the target
-            # emits after the window's first j+1 tokens
-            a = 0
-            while a < w - 1 and draft[row, a] == target[row, a]:
-                a += 1
+            a = int(accepted[row])
             req.spec_rounds += 1
             req.spec_proposed += w - 1
             req.spec_accepted += a
             self.stats["rounds"] += 1
             self.stats["proposed"] += w - 1
             self.stats["accepted"] += a
-            # emit accepted proposals + the target's bonus/correction,
+            # emit accepted proposals + the correction/bonus token,
             # re-checking the budget after every token exactly like the
             # plain engine's one-token steps (eos truncates the window)
-            for tok in target[row, : a + 1]:
+            for tok in emit[row, : a + 1]:
                 req.generated.append(int(tok))
                 self.stats["emitted"] += 1
                 if req.budget_reached(self.max_len):

@@ -44,3 +44,9 @@ def given(*args, **kwargs):
         _skipped.__doc__ = fn.__doc__
         return _skipped
     return deco
+
+
+def assume(condition):
+    """Inert stand-in: only ever reachable from a ``@given`` body, which
+    the stub never executes."""
+    return bool(condition)

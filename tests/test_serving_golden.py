@@ -67,3 +67,52 @@ def test_golden_token_streams(tmp_path):
         "token streams drifted from tests/golden/serving_tokens.json — if "
         "this change is intentional, regenerate with REPRO_UPDATE_GOLDEN=1 "
         "and commit the diff")
+
+
+def test_golden_t0_bitexact_across_all_engines(tmp_path):
+    """Greedy is the T=0 special case of sampling, not a separate code
+    path — so an explicit ``SamplingParams(temperature=0)`` (with a
+    non-zero seed and active-looking top-k/top-p, all of which greedy
+    must ignore) has to reproduce the golden streams bit-identically
+    through ALL three engines: paged, fixed-slot, and speculative."""
+    from repro.compiler import compile_lm_amm
+    from repro.configs import get_config
+    from repro.models import model as MD
+    from repro.serving import (FixedSlotEngine, SamplingParams, ServeEngine,
+                               SpeculativeEngine)
+
+    if not GOLDEN_PATH.is_file():
+        pytest.skip("golden file not generated yet")
+    golden = json.loads(GOLDEN_PATH.read_text())
+
+    cfg = get_config("qwen3-14b", reduced=True)
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, d_ff=128,
+                              vocab_size=64, num_heads=2, num_kv_heads=1,
+                              head_dim=32)
+    cfg = dataclasses.replace(
+        cfg, amm=dataclasses.replace(cfg.amm, enabled=True))
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    calib_tokens = np.random.default_rng(0).integers(0, 64, (4, 16))
+    out = tmp_path / "lm_art"
+    res = compile_lm_amm(params, cfg, calib_tokens, out=str(out))
+
+    # T=0 must make seed/top_k/top_p inert: give them loud values
+    t0 = SamplingParams(temperature=0.0, top_k=3, top_p=0.5, seed=1234)
+    engines = {
+        "paged": ServeEngine.from_artifact(out, params, cfg, max_batch=2,
+                                           max_len=64, page_size=16,
+                                           prefill_chunk=4),
+        "fixed": FixedSlotEngine.from_artifact(out, params, cfg, slots=2,
+                                               max_len=64),
+        "speculative": SpeculativeEngine.from_artifacts(
+            res.artifact, res.artifact, params, cfg, spec_k=3, max_batch=2,
+            max_len=64, page_size=16, prefill_chunk=4),
+    }
+    for name, eng in engines.items():
+        reqs = [eng.submit(p, max_new_tokens=MAX_NEW, sampling=t0)
+                for p in PROMPTS]
+        eng.run_until_drained()
+        streams = {",".join(map(str, r.prompt)): r.generated for r in reqs}
+        assert streams == golden, (
+            f"{name} engine at temperature=0 drifted from the golden "
+            f"greedy streams")

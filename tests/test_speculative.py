@@ -77,6 +77,63 @@ def test_identical_draft_bitmatches_and_accepts_all(setup, spec_k):
     assert spec.stats["proposed"] > 0
 
 
+def test_identical_draft_accepts_all_under_sampling(setup):
+    """Rejection sampling with q == p accepts with probability
+    min(1, p/q) = 1 — so an identical draft must keep acceptance at
+    exactly 1.0 under stochastic sampling too (the T>0 generalisation of
+    the greedy prefix-match guarantee; ``u * q(x) < p(x)`` holds for
+    every u < 1 when the distributions are bitwise equal)."""
+    import dataclasses as dc
+
+    from repro.serving import SamplingParams
+
+    cfg, params, _ = setup
+    spec = SpeculativeEngine(params, cfg, params, spec_k=3, max_batch=3,
+                             max_len=64, page_size=16, prefill_chunk=4)
+    base = SamplingParams(temperature=1.2, top_k=8, top_p=0.9)
+    reqs = [spec.submit(p, max_new_tokens=8,
+                        sampling=dc.replace(base, seed=i))
+            for i, p in enumerate(PROMPTS)]
+    spec.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert spec.stats["proposed"] > 0
+    assert spec.acceptance_rate == 1.0
+    spec.sched.check_invariants()
+    assert spec.kv.allocator.in_use == 0
+
+
+def test_mixed_batch_t0_rows_stay_greedy(setup):
+    """T=0 requests decoded *in the same batch* as T>0 requests take the
+    sampled round program (the all-greedy fast path only fires when every
+    active row is greedy) — and their streams must still bit-match the
+    plain engine's greedy oracle.  This pins the sampled program's T=0
+    degeneration (one-hot p/q → prefix-match accept, argmax
+    residual/bonus), which the fast path would otherwise mask."""
+    import dataclasses as dc
+
+    from repro.serving import SamplingParams
+
+    cfg, params, oracle = setup
+    spec = SpeculativeEngine(params, cfg, params, spec_k=3, max_batch=3,
+                             max_len=64, page_size=16, prefill_chunk=4)
+    hot = SamplingParams(temperature=1.2, top_k=8, top_p=0.9)
+    reqs = []
+    for i, p in enumerate(PROMPTS):
+        # alternate greedy / sampled so every decode batch mixes both
+        sp = SamplingParams() if i % 2 == 0 else dc.replace(hot, seed=i)
+        reqs.append(spec.submit(p, max_new_tokens=8, sampling=sp))
+    spec.run_until_drained()
+    assert all(r.done for r in reqs)
+    mixed_rounds = spec.stats["rounds"]
+    for i, r in enumerate(reqs):
+        if i % 2 == 0:
+            assert r.generated == oracle[tuple(r.prompt)], (
+                i, r.prompt, r.generated, oracle[tuple(r.prompt)])
+    assert mixed_rounds > 0
+    spec.sched.check_invariants()
+    assert spec.kv.allocator.in_use == 0
+
+
 def test_garbage_draft_still_bitmatches(setup):
     """A draft proposing near-random tokens costs throughput, never
     correctness: rejected proposals are replaced by the target's own
