@@ -5,9 +5,14 @@ continuous batching exists for) on a tiny reduced config, sweeping the
 decode-batch size and every mesh shape that fits the host device count
 (fake devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 to exercise the sharded cells — the CI jobs do).  Emitted per cell:
-``us`` = µs per generated token, ``derived`` = tokens/s plus the request
-mix; plus a ``paged_vs_fixed`` ratio record per batch size — the record
-``benchmarks/check_trajectory.py`` gates on (paged must beat fixed slots).
+``us`` = µs per generated token, ``derived`` = tokens/s, mean decode-batch
+occupancy and mean TTFT (ms) plus the request mix — all read from the
+PR-7 metrics registry (each engine runs with a metrics-only
+:class:`repro.serving.Recorder`, reset after the warm-up drain, so the
+reported numbers and ``--metrics`` serving snapshots share one source of
+truth); plus a ``paged_vs_fixed`` ratio record per batch size — the record
+``benchmarks/check_trajectory.py`` gates on (paged must beat fixed slots,
+and every engine cell must carry numeric ``occupancy``/``ttft_ms``).
 
 The fixed-slot engine re-runs an eager whole-prompt prefill per admission
 (every distinct prompt length is a fresh set of op shapes); the paged
@@ -57,17 +62,31 @@ def _drain(engine, prompts, max_new):
     for p in prompts:
         engine.submit(p, max_new_tokens=max_new)
     t0 = time.perf_counter()
-    done = engine.run_until_drained()
-    dt = time.perf_counter() - t0
-    n_tok = sum(len(r.generated) for r in done)
-    return n_tok, dt
+    engine.run_until_drained()
+    return time.perf_counter() - t0
 
 
-def _build(kind, params, cfg, batch, mesh):
+def _registry_cells(rec, dt):
+    """tok/s, occupancy and TTFT for a measured drain — read from the
+    recorder's registry, the same numbers ``--metrics`` serving reports."""
+    reg = rec.registry
+    n_tok = int(reg.value("serve_generated_tokens_total"))
+    occ = reg.find("serve_batch_occupancy")[0]
+    ttft = reg.find("serve_ttft_seconds")[0]
+    return n_tok, {
+        "tok_s": n_tok / max(dt, 1e-9),
+        "occupancy": occ.mean,
+        "ttft_ms": ttft.mean * 1e3,
+    }
+
+
+def _build(kind, params, cfg, batch, mesh, rec):
     from repro.serving import FixedSlotEngine, ServeEngine
 
     if kind == "fixed":
-        return FixedSlotEngine(params, cfg, slots=batch, max_len=64, mesh=mesh)
+        return FixedSlotEngine(
+            params, cfg, slots=batch, max_len=64, mesh=mesh, recorder=rec
+        )
     return ServeEngine(
         params,
         cfg,
@@ -76,11 +95,13 @@ def _build(kind, params, cfg, batch, mesh):
         page_size=16,
         prefill_chunk=8,
         mesh=mesh,
+        recorder=rec,
     )
 
 
 def run(requests: int = 8, max_new: int = 8) -> None:
     from repro.models import model as MD
+    from repro.serving import Recorder
 
     cfg = _tiny_cfg()
     params = MD.init_params(cfg, jax.random.PRNGKey(0))
@@ -97,16 +118,22 @@ def run(requests: int = 8, max_new: int = 8) -> None:
         for batch in BATCH:
             tok_s = {}
             for kind in ("fixed", "paged"):
-                engine = _build(kind, params, cfg, batch, mesh)
+                rec = Recorder(trace=False)
+                engine = _build(kind, params, cfg, batch, mesh, rec)
                 # first drain warms the compiled prefill/decode, second is
-                # timed — same mixed workload for both engines
+                # timed — same mixed workload for both engines; the reset
+                # drops warm-up samples (and jit compiles) from the cells
                 _drain(engine, prompts[:1], 2)
-                n_tok, dt = _drain(engine, prompts, max_new)
-                tok_s[kind] = n_tok / max(dt, 1e-9)
+                rec.reset()
+                dt = _drain(engine, prompts, max_new)
+                n_tok, cells = _registry_cells(rec, dt)
+                tok_s[kind] = cells["tok_s"]
                 emit(
                     f"serve/mesh{tag}/{kind}/batch{batch}",
                     dt / max(n_tok, 1) * 1e6,
-                    f"tok_s={tok_s[kind]:.1f};requests={requests};"
+                    f"tok_s={cells['tok_s']:.1f};"
+                    f"occupancy={cells['occupancy']:.2f};"
+                    f"ttft_ms={cells['ttft_ms']:.2f};requests={requests};"
                     f"max_new={max_new};mix={'-'.join(map(str, MIX))}",
                 )
             emit(

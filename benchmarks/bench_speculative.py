@@ -106,7 +106,8 @@ def _drain(engine, prompts, max_new, sampling=None):
 
 def run() -> None:
     from repro.compiler import compile_lm_bundle
-    from repro.serving import SamplingParams, ServeEngine, SpeculativeEngine
+    from repro.serving import (Recorder, SamplingParams, ServeEngine,
+                               SpeculativeEngine)
     from repro.serving.engine import _splice_artifact
 
     cfg = _tiny_cfg()
@@ -118,24 +119,41 @@ def run() -> None:
     params_t, cfg_t = _splice_artifact(bundle.target, params, cfg, None)
     prompts = _prompts(ts, REQUESTS)
 
+    # reported cells (tok/s, acceptance, occupancy, TTFT) are derived from
+    # the engines' PR-7 metrics registries — the same source of truth the
+    # serving `--metrics` snapshot reads; reset after the warm-up drain
+    # drops warm-up requests and jit compiles from the measured numbers
+    def cells(reg, dt):
+        n_tok = int(reg.value("serve_generated_tokens_total"))
+        return n_tok, {
+            "tok_s": n_tok / max(dt, 1e-9),
+            "occupancy": reg.find("serve_batch_occupancy")[0].mean,
+            "ttft_ms": reg.find("serve_ttft_seconds")[0].mean * 1e3,
+        }
+
     for batch in BATCH:
+        rec = Recorder(trace=False)
         plain = ServeEngine(params_t, cfg_t, max_batch=batch, max_len=64,
-                            page_size=16, prefill_chunk=8)
+                            page_size=16, prefill_chunk=8, recorder=rec)
         _drain(plain, prompts[:1], 2)  # warm the compiled programs
+        rec.reset()
         n_tok, dt, done = _drain(plain, prompts, MAX_NEW)
-        plain_tok = n_tok / max(dt, 1e-9)
+        n_tok, c = cells(rec.registry, dt)
+        plain_tok = c["tok_s"]
         oracle = {tuple(r.prompt): list(r.generated) for r in done}
         emit(
             f"spec/plain/batch{batch}",
             dt / max(n_tok, 1) * 1e6,
-            f"tok_s={plain_tok:.1f};requests={REQUESTS};max_new={MAX_NEW};"
-            f"mix={'-'.join(map(str, MIX))}",
+            f"tok_s={plain_tok:.1f};occupancy={c['occupancy']:.2f};"
+            f"ttft_ms={c['ttft_ms']:.2f};requests={REQUESTS};"
+            f"max_new={MAX_NEW};mix={'-'.join(map(str, MIX))}",
         )
         for k in K_VALUES:
             spec = SpeculativeEngine.from_artifacts(
                 bundle.target, bundle.draft, params, cfg, spec_k=k,
                 max_batch=batch, max_len=64, page_size=16, prefill_chunk=8)
             _drain(spec, prompts[:1], 2)
+            spec.obs.reset()  # acceptance measured on the timed drain only
             n_tok, dt, done = _drain(spec, prompts, MAX_NEW)
             for r in done:
                 if r.generated != oracle[tuple(r.prompt)]:
@@ -143,13 +161,15 @@ def run() -> None:
                         f"speculative stream diverged from plain decode for "
                         f"prompt {r.prompt}: {r.generated} vs "
                         f"{oracle[tuple(r.prompt)]}")
-            spec_tok = n_tok / max(dt, 1e-9)
+            n_tok, c = cells(spec.obs.registry, dt)
+            spec_tok = c["tok_s"]
             acc = spec.acceptance_rate
             emit(
                 f"spec/speculative/batch{batch}/k{k}",
                 dt / max(n_tok, 1) * 1e6,
                 f"tok_s={spec_tok:.1f};acceptance={acc:.3f};"
                 f"tokens_per_round={spec.mean_emitted_per_round:.2f};"
+                f"occupancy={c['occupancy']:.2f};ttft_ms={c['ttft_ms']:.2f};"
                 f"bitmatch=1",
             )
             emit(
@@ -170,11 +190,13 @@ def run() -> None:
                 bundle.target, bundle.draft, params, cfg, spec_k=k,
                 max_batch=batch, max_len=64, page_size=16, prefill_chunk=8)
             _drain(spec_s, prompts[:1], 2, sampling=sp)
+            spec_s.obs.reset()
             n_tok, dt, _ = _drain(spec_s, prompts, MAX_NEW, sampling=sp)
+            n_tok, c = cells(spec_s.obs.registry, dt)
             emit(
                 f"spec/spec_sampling/batch{batch}/k{k}",
                 dt / max(n_tok, 1) * 1e6,
-                f"tok_s={n_tok / max(dt, 1e-9):.1f};"
+                f"tok_s={c['tok_s']:.1f};"
                 f"acceptance={spec_s.acceptance_rate:.3f};"
                 f"temperature={sp.temperature};top_k={sp.top_k};"
                 f"seed={sp.seed}",

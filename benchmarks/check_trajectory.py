@@ -21,7 +21,12 @@ Checks, in order:
      least one ``spec/spec_sampling/...`` cell must exist and carry a
      numeric acceptance rate in ``[0, 1]``: the rejection-sampling
      acceptance path (PR 6) cannot silently fall out of the measured
-     surface.
+     surface;
+  6. **the observability claim** — every engine-throughput record
+     (``serve/mesh*/fixed|paged/...``) must carry numeric ``occupancy``
+     (> 0 rows) and ``ttft_ms`` (> 0) cells: PR 7 derives benchmark
+     numbers from the serving metrics registry, and a refactor cannot
+     silently drop the registry-backed cells from the measured surface.
 
 Absolute µs numbers are *not* compared — CI machines vary too much; the
 trajectory tracks structure and engine-vs-engine ordering, which are
@@ -98,6 +103,17 @@ def check(baseline: dict, new: dict, min_ratio: float,
             errors.append(
                 f"{rec['name']}: acceptance {acc!r} is not a number in "
                 f"[0, 1]")
+    engine_recs = [r for r in new.get("records", [])
+                   if r["name"].startswith("serve/")
+                   and ("/paged/" in r["name"] or "/fixed/" in r["name"])]
+    for rec in engine_recs:
+        d = _parse_derived(rec["derived"])
+        for key in ("occupancy", "ttft_ms"):
+            v = d.get(key)
+            if not isinstance(v, float) or v <= 0.0:
+                errors.append(
+                    f"{rec['name']}: {key} {v!r} is not a positive number "
+                    f"— registry-backed cells missing")
     return errors
 
 

@@ -33,8 +33,9 @@ from repro.configs import ARCH_IDS, get_config
 from repro.data import TokenStream
 from repro.launch.mesh import make_serve_mesh
 from repro.models import model as MD
-from repro.serving import (FixedSlotEngine, SamplingParams, ServeEngine,
-                           SpeculativeEngine)
+from repro.serving import (FixedSlotEngine, Recorder, SamplingParams,
+                           ServeEngine, SpeculativeEngine, log,
+                           summary_table)
 
 
 def _artifact_kind(path):
@@ -65,16 +66,16 @@ def _resolve_mesh(args):
                          f"{args.artifact!r}: {e}")
     want = manifest.get("mesh")
     if not want:
-        print("[serve] artifact records no intended mesh; serving unsharded")
+        log("serve", "artifact records no intended mesh; serving unsharded")
         return None
     spec = f"{want['data']}x{want['model']}"
     try:
         mesh = make_serve_mesh(spec)
     except ValueError as e:
-        print(f"[serve] artifact-recorded mesh unusable ({e}); "
-              "serving unsharded")
+        log("serve", f"artifact-recorded mesh unusable ({e}); "
+            "serving unsharded")
         return None
-    print(f"[serve] using artifact-recorded mesh {spec}")
+    log("serve", f"using artifact-recorded mesh {spec}")
     return mesh
 
 
@@ -143,6 +144,15 @@ def main() -> None:
                          "'auto' to use the mesh recorded in the --artifact "
                          "manifest; default: single-device")
     ap.add_argument("--ckpt")
+    ap.add_argument("--metrics", metavar="PATH",
+                    help="record serving metrics (TTFT/TPOT/ITL histograms, "
+                         "pool gauges, speculative acceptance, ...), print "
+                         "a summary table, and write a Prometheus "
+                         "text-format exposition snapshot to PATH")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="record per-request lifecycle spans and write "
+                         "Chrome trace-event JSON to PATH (open in Perfetto "
+                         "or chrome://tracing; see docs/observability.md)")
     args = ap.parse_args()
 
     mesh = _resolve_mesh(args)
@@ -167,17 +177,22 @@ def main() -> None:
     use_paged = (args.engine or
                  ("paged" if MD.supports_paged(cfg) else "fixed")) == "paged"
     art_kind = _artifact_kind(args.artifact) if args.artifact else None
+    # one recorder feeds the summary table, the Prometheus snapshot and
+    # the Chrome trace; without the flags engines keep the NullRecorder
+    # (zero-overhead-off — see docs/observability.md)
+    rec = (Recorder(trace=bool(args.trace_out))
+           if (args.metrics or args.trace_out) else None)
     if use_paged:
         cls = ServeEngine
         kwargs = dict(max_batch=max_batch, max_len=args.max_len,
                       page_size=args.page_size,
                       prefill_chunk=args.prefill_chunk,
                       num_pages=args.num_pages, compute_dtype=dtype,
-                      mesh=mesh)
+                      mesh=mesh, recorder=rec)
     else:
         cls = FixedSlotEngine
         kwargs = dict(slots=max_batch, max_len=args.max_len,
-                      compute_dtype=dtype, mesh=mesh)
+                      compute_dtype=dtype, mesh=mesh, recorder=rec)
 
     if args.speculative:
         if not use_paged:
@@ -206,8 +221,8 @@ def main() -> None:
             kwargs.setdefault("spec_k", 4)
             calib = TokenStream(vocab_size=cfg.vocab_size, batch_size=8,
                                 seq_len=32)
-            print(f"[serve] compiling in-process bundle (target=int8, "
-                  f"draft={args.draft_resolution})…")
+            log("serve", f"compiling in-process bundle (target=int8, "
+                f"draft={args.draft_resolution})…")
             res = compile_lm_bundle(
                 params, cfg, calib.batch(0)["tokens"],
                 target_resolution="int8",
@@ -241,9 +256,18 @@ def main() -> None:
     print(f"{len(done)} requests, {n_tok} tokens, {dt:.1f}s "
           f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
     if args.speculative:
-        print(f"[spec] k={engine.spec_k} rounds={engine.stats['rounds']} "
-              f"acceptance={engine.acceptance_rate:.3f} "
-              f"tokens/round={engine.mean_emitted_per_round:.2f}")
+        log("spec", f"k={engine.spec_k} rounds={engine.stats['rounds']} "
+            f"acceptance={engine.acceptance_rate:.3f} "
+            f"tokens/round={engine.mean_emitted_per_round:.2f}")
+    if rec is not None:
+        print(summary_table(rec.registry))
+        if args.metrics:
+            rec.write_metrics(args.metrics)
+            log("serve", f"metrics (Prometheus text format) → {args.metrics}")
+        if args.trace_out:
+            rec.write_trace(args.trace_out)
+            log("serve", f"trace (Chrome trace-event JSON) → "
+                f"{args.trace_out}")
     for r in done:
         print(f"  req {r.uid}: {r.prompt} → {r.generated}")
 

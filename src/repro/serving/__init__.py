@@ -2,6 +2,10 @@ from repro.serving.engine import (FixedSlotEngine, Request,  # noqa: F401
                                   ServeEngine, make_engine)
 from repro.serving.kv_cache import (PageAllocator, PagedKVCache,  # noqa: F401
                                     PageError)
+from repro.serving.obs import (NULL_RECORDER, MetricsRegistry,  # noqa: F401
+                               NullRecorder, Recorder, Tracer, log,
+                               summary_table, validate_chrome_trace,
+                               validate_prometheus)
 from repro.serving.sampling import SamplingParams  # noqa: F401
 from repro.serving.scheduler import Scheduler, StepPlan  # noqa: F401
 from repro.serving.speculative import SpeculativeEngine  # noqa: F401

@@ -60,6 +60,7 @@ from repro.models.config import ModelConfig
 from repro.serving import sampling as S
 from repro.serving import scheduler as SCH
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.obs import NULL_RECORDER, log
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 
@@ -103,8 +104,8 @@ def _splice_artifact(art, params, cfg: ModelConfig, mesh):
     if want and mesh is not None:
         have = {ax: int(n) for ax, n in mesh.shape.items()}
         if {k: int(v) for k, v in want.items()} != have:
-            print(f"[serve] note: artifact was compiled for mesh {want}, "
-                  f"serving on {have}")
+            log("serve", f"note: artifact was compiled for mesh {want}, "
+                f"serving on {have}")
     return art.splice_lm_params(params), cfg
 
 
@@ -154,12 +155,18 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = None,
                  slots: int = None, max_len: int = 256, page_size: int = 16,
                  prefill_chunk: int = 32, num_pages: int = None,
-                 compute_dtype=jnp.float32, mesh=None):
+                 compute_dtype=jnp.float32, mesh=None, recorder=None):
         if not MD.supports_paged(cfg):
             raise ValueError(
                 f"family {cfg.family!r} has no paged decode path — serve it "
                 "with FixedSlotEngine")
         self.cfg = cfg
+        # observability (obs.py): the recorder threads through the
+        # scheduler, cache and allocator so request lifecycle, pool and
+        # swap telemetry all land in one registry.  Every hook site is
+        # ``if self.obs:``-guarded — the default NullRecorder is falsy, so
+        # disabled cost is one host truthiness check and no device syncs.
+        self.obs = recorder if recorder is not None else NULL_RECORDER
         # ``slots`` is the fixed-slot engine's name for the same knob; keep
         # it as an alias so call sites migrate freely.
         self.max_batch = int(max_batch or slots or 4)
@@ -176,11 +183,13 @@ class ServeEngine:
 
         dp = 1 if mesh is None else MeshAxes.for_mesh(mesh).dp_size(mesh)
         self.kv = PagedKVCache(cfg, num_pages=num_pages, page_size=ps,
-                               dtype=compute_dtype, pad_to=dp)
+                               dtype=compute_dtype, pad_to=dp,
+                               recorder=recorder)
         self.sched = Scheduler(
             max_batch=self.max_batch, allocator=self.kv.allocator,
             page_size=ps, max_pages_per_seq=mp,
-            prefill_chunk=self.prefill_chunk, max_len=max_len)
+            prefill_chunk=self.prefill_chunk, max_len=max_len,
+            recorder=recorder)
 
         if mesh is None:
             self._constrain = MD._id
@@ -214,6 +223,11 @@ class ServeEngine:
 
         self._decode = jax.jit(_decode, donate_argnums=(4,), **jit_d)
         self._prefill = jax.jit(_prefill, donate_argnums=(5,), **jit_p)
+        if self.obs:
+            self.obs.register_jit_site("serve.decode", self._decode)
+            self.obs.register_jit_site("serve.prefill", self._prefill)
+            self.obs.register_jit_site("sampling.sample_tokens",
+                                       S.sample_tokens_jit)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -276,6 +290,9 @@ class ServeEngine:
             self._run_prefill_chunk(plan.prefill, finished)
         if plan.decode:
             self._run_decode(plan.decode, finished)
+        if self.obs:
+            self.obs.sample_pool(self.kv.allocator)
+            self.obs.poll_jit()
         return finished
 
     def run_until_drained(self, max_steps: int = 10000) -> List[Request]:
@@ -302,16 +319,28 @@ class ServeEngine:
         toks[0, : chunk.n_valid] = req.prompt[chunk.start:
                                               chunk.start + chunk.n_valid]
         page_row = self.kv.page_row(req.pages, self.max_pages_per_seq)
+        obs = self.obs
+        t0 = obs.now() if obs else 0.0
         logits = self._prefill_call(toks, chunk, page_row)
         req.pf_done += chunk.n_valid
         if req.pf_done == len(req.prompt):
             req.generated.append(
                 int(_sample_batch(logits[0, -1:], [(0, req)], 1)[0]))
+            if obs:
+                t1 = obs.now()
+                obs.on_prefill(req, chunk.start // self.prefill_chunk,
+                               chunk.n_valid, t0, t1)
+                obs.on_tokens(req, 1, t1, source="prefill")
             if req.budget_reached(self.max_len):
                 self.sched.retire(req)
                 finished.append(req)
             else:
                 self.sched.prefill_finished(req)
+        elif obs:
+            # non-final chunk: the dispatch window (no host sync happens
+            # here, so the span measures host+dispatch work only)
+            obs.on_prefill(req, chunk.start // self.prefill_chunk,
+                           chunk.n_valid, t0, obs.now())
 
     def _run_decode(self, decode, finished: List[Request]) -> None:
         token = np.zeros((self.max_batch, 1), np.int32)
@@ -322,12 +351,21 @@ class ServeEngine:
             token[row, 0] = req.generated[-1]
             pos[row] = req.next_pos
             table[row, : len(req.pages)] = req.pages
+        obs = self.obs
+        t0 = obs.now() if obs else 0.0
         logits, self.kv.buffers = self._decode(
             self.params, jnp.asarray(token), jnp.asarray(pos),
             jnp.asarray(table), self.kv.buffers)
         nxt = _sample_batch(logits[:, 0], decode, self.max_batch)
+        if obs:
+            # _sample_batch pulled the tokens to host, so t1 covers the
+            # step's real wall time without adding a sync of our own
+            t1 = obs.now()
+            obs.on_decode(decode, t0, t1)
         for row, req in decode:
             req.generated.append(int(nxt[row]))
+            if obs:
+                obs.on_tokens(req, 1, t1)
             if req.budget_reached(self.max_len):
                 self.sched.retire(req)
                 finished.append(req)
@@ -340,12 +378,16 @@ class FixedSlotEngine:
     oracle, and the serving path for SSM / hybrid / enc-dec families."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_len: int = 256, compute_dtype=jnp.float32, mesh=None):
+                 max_len: int = 256, compute_dtype=jnp.float32, mesh=None,
+                 recorder=None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.cd = compute_dtype
         self.mesh = mesh
+        # same zero-overhead-off observability contract as ServeEngine
+        # (no scheduler here, so lifecycle hooks fire from the engine)
+        self.obs = recorder if recorder is not None else NULL_RECORDER
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
         self.pos = np.zeros(slots, dtype=np.int64)  # per-slot next position
@@ -383,6 +425,10 @@ class FixedSlotEngine:
             return logits, cache
 
         self._decode = jax.jit(_decode, donate_argnums=(3,), **jit_kwargs)
+        if self.obs:
+            self.obs.register_jit_site("fixed.decode", self._decode)
+            self.obs.register_jit_site("sampling.sample_tokens",
+                                       S.sample_tokens_jit)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -403,6 +449,8 @@ class FixedSlotEngine:
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
                       sampling=sampling or SamplingParams())
         self.queue.append(req)
+        if self.obs:
+            self.obs.on_submit(req)
         return req
 
     def _admit(self) -> List[Request]:
@@ -410,9 +458,13 @@ class FixedSlotEngine:
         finished: List[Request] = []
         free = [s for s in range(self.slots) if s not in self.active]
         spliced = False
+        obs = self.obs
         while free and self.queue:
             slot = free.pop(0)
             req = self.queue.popleft()
+            if obs:
+                obs.on_admit(req)
+                t0 = obs.now()
             tokens = jnp.asarray(req.prompt, jnp.int32)[None]
             logits, cache1 = MD.prefill(
                 self.params, tokens, self.cfg, self.max_len,
@@ -426,10 +478,16 @@ class FixedSlotEngine:
             spliced = True
             req.generated.append(
                 int(_sample_batch(logits[0, -1:], [(0, req)], 1)[0]))
+            if obs:
+                t1 = obs.now()
+                obs.on_prefill(req, 0, len(req.prompt), t0, t1)
+                obs.on_tokens(req, 1, t1, source="prefill")
             if req.budget_reached(self.max_len):
                 req.done = True
                 finished.append(req)
                 free.insert(0, slot)
+                if obs:
+                    obs.on_finish(req)
                 continue
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
@@ -448,25 +506,38 @@ class FixedSlotEngine:
         """One engine iteration: admit, batched decode, retire."""
         finished = self._admit()
         if not self.active:
+            if self.obs:
+                self.obs.poll_jit()
             return finished
         token = np.zeros((self.slots, 1), dtype=np.int32)
         for slot, req in self.active.items():
             token[slot, 0] = req.generated[-1] if req.generated else 0
+        obs = self.obs
+        t0 = obs.now() if obs else 0.0
         logits, self.cache = self._decode(
             self.params, jnp.asarray(token),
             jnp.asarray(self.pos, jnp.int32), self.cache)
         nxt = _sample_batch(logits[:, 0], list(self.active.items()),
                             self.slots)
+        if obs:
+            t1 = obs.now()
+            obs.on_decode(list(self.active.items()), t0, t1)
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])
             req.generated.append(tok)
             self.pos[slot] += 1
+            if obs:
+                obs.on_tokens(req, 1, t1)
             if (len(req.generated) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id)
                     or self.pos[slot] >= self.max_len - 1):
                 req.done = True
                 finished.append(req)
                 del self.active[slot]
+                if obs:
+                    obs.on_finish(req)
+        if obs:
+            obs.poll_jit()
         return finished
 
     def run_until_drained(self, max_steps: int = 10000) -> List[Request]:

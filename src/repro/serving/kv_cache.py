@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.models import model as MD
 from repro.models.config import ModelConfig
+from repro.serving.obs import NULL_RECORDER
 
 Array = jax.Array
 
@@ -46,12 +47,15 @@ class PageAllocator:
     of silent cache corruption.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, *, recorder=None):
         if num_pages < 1:
             raise ValueError(f"need at least one page, got {num_pages}")
         self.num_pages = num_pages
         self._free: Deque[int] = deque(range(num_pages))
         self._free_set: Set[int] = set(range(num_pages))
+        # observability hooks (obs.py); the default NullRecorder is falsy
+        # so each hook site costs one truthiness check when disabled
+        self.obs = recorder if recorder is not None else NULL_RECORDER
 
     @property
     def available(self) -> int:
@@ -65,9 +69,13 @@ class PageAllocator:
         if n < 0:
             raise PageError(f"cannot allocate {n} pages")
         if n > len(self._free):
+            if self.obs:
+                self.obs.on_alloc_fail(n)
             return None
         pages = [self._free.popleft() for _ in range(n)]
         self._free_set.difference_update(pages)
+        if self.obs:
+            self.obs.on_alloc(n)
         return pages
 
     def free(self, pages: List[int]) -> None:
@@ -79,6 +87,8 @@ class PageAllocator:
         for p in pages:
             self._free.append(p)
             self._free_set.add(p)
+        if self.obs and pages:
+            self.obs.on_free(len(pages))
 
     def free_pages(self) -> Set[int]:
         """Snapshot of the free set (for invariant checks)."""
@@ -107,7 +117,7 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
                  dtype=jnp.float32, pad_to: int = 1,
-                 allocator: Optional[PageAllocator] = None):
+                 allocator: Optional[PageAllocator] = None, recorder=None):
         """``allocator`` shares another cache's page pool: the speculative
         engine mirrors its target cache with a draft cache of identical
         geometry, and one page id must address the same logical slot in
@@ -122,7 +132,9 @@ class PagedKVCache:
             raise ValueError(
                 f"shared allocator manages {allocator.num_pages} pages, "
                 f"mirror cache asked for {num_pages}")
-        self.allocator = allocator or PageAllocator(num_pages)
+        self.obs = recorder if recorder is not None else NULL_RECORDER
+        self.allocator = allocator or PageAllocator(num_pages,
+                                                    recorder=recorder)
         # +1 physical page for the trash page, then round the physical
         # count up to a multiple of ``pad_to`` (the engine passes the DP
         # degree) so the page axis actually divides the mesh and the
@@ -147,14 +159,19 @@ class PagedKVCache:
     def gather_host(self, pages: List[int]) -> HostKV:
         """Copy the given physical pages to host (swap-out)."""
         idx = np.asarray(pages, np.int32)
-        return HostKV(k=np.asarray(self.buffers["k"][:, idx]),
+        host = HostKV(k=np.asarray(self.buffers["k"][:, idx]),
                       v=np.asarray(self.buffers["v"][:, idx]))
+        if self.obs:
+            self.obs.on_swap_bytes("out", host.k.nbytes + host.v.nbytes)
+        return host
 
     def scatter_host(self, host: HostKV, pages: List[int]) -> None:
         """Write a host copy back into (newly allocated) pages (swap-in)."""
         if len(pages) < host.num_pages:
             raise PageError(
                 f"swap-in needs {host.num_pages} pages, got {len(pages)}")
+        if self.obs:
+            self.obs.on_swap_bytes("in", host.k.nbytes + host.v.nbytes)
         idx = jnp.asarray(pages[: host.num_pages], jnp.int32)
         self.buffers = {
             "k": self.buffers["k"].at[:, idx].set(

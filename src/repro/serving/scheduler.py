@@ -39,6 +39,7 @@ import itertools
 from typing import Dict, List, Optional, Tuple
 
 from repro.serving.kv_cache import HostKV, PageAllocator
+from repro.serving.obs import NULL_RECORDER
 from repro.serving.sampling import SamplingParams
 
 # request states
@@ -115,8 +116,11 @@ class StepPlan:
 class Scheduler:
     def __init__(self, *, max_batch: int, allocator: PageAllocator,
                  page_size: int, max_pages_per_seq: int, prefill_chunk: int,
-                 max_len: int, lookahead: int = 1):
+                 max_len: int, lookahead: int = 1, recorder=None):
         self.max_batch = max_batch
+        # observability: every hook site is ``if self.obs:``-guarded, so
+        # the default NullRecorder costs one truthiness check (obs.py)
+        self.obs = recorder if recorder is not None else NULL_RECORDER
         self.alloc = allocator
         self.page_size = page_size
         self.max_pages_per_seq = max_pages_per_seq
@@ -148,6 +152,8 @@ class Scheduler:
         req.seq = next(self._seq)
         req.state = WAITING
         self.waiting.append(req)
+        if self.obs:
+            self.obs.on_submit(req)
 
     def cancel(self, uid: int) -> bool:
         """Drop a request wherever it is; frees its row/pages.  Returns
@@ -171,6 +177,8 @@ class Scheduler:
         req.state = DONE
         req.cancelled = True
         req.done = True
+        if self.obs:
+            self.obs.on_cancel(req)
         return True
 
     # -- per-step planning -------------------------------------------------
@@ -210,6 +218,8 @@ class Scheduler:
         self._release(req)
         req.state = DONE
         req.done = True
+        if self.obs:
+            self.obs.on_finish(req)
 
     def live(self) -> List[Request]:
         return (self.waiting + self.swapped + list(self.rows.values()))
@@ -252,6 +262,8 @@ class Scheduler:
             req.state = RUNNING
             self.swapped.remove(req)
             plan.swap_in.append(req)
+            if self.obs:
+                self.obs.on_resume(req)
 
     def _admit(self) -> None:
         for req in self._ordered(list(self.waiting)):
@@ -267,6 +279,8 @@ class Scheduler:
             req.state = PREFILL
             req.pf_done = 0
             self.waiting.remove(req)
+            if self.obs:
+                self.obs.on_admit(req)
 
     def _ensure_pages(self, req: Request, n_tokens: int,
                       plan: StepPlan) -> bool:
@@ -311,6 +325,8 @@ class Scheduler:
         if extra:
             req.pages = req.pages[:keep]
             self.alloc.free(extra)
+            if self.obs:
+                self.obs.on_rollback(len(extra))
         return len(extra)
 
     def _evict(self, victim: Request, plan: StepPlan) -> None:
@@ -320,6 +336,8 @@ class Scheduler:
             victim.state = WAITING
             victim.pf_done = 0
             self.waiting.append(victim)  # seq preserved → re-admits in order
+            if self.obs:
+                self.obs.on_evict(victim, "restart")
         else:
             self._swap_out(victim, plan)
 
@@ -328,6 +346,8 @@ class Scheduler:
         self._release(req)
         req.state = SWAPPED
         self.swapped.append(req)
+        if self.obs:
+            self.obs.on_evict(req, "swap")
 
     # -- invariants (used by the fuzz tests) --------------------------------
     def check_invariants(self) -> None:

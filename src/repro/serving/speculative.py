@@ -77,6 +77,7 @@ from repro.models.config import ModelConfig
 from repro.serving import sampling as S
 from repro.serving.engine import ServeEngine, _splice_artifact
 from repro.serving.kv_cache import HostKV, PagedKVCache
+from repro.serving.obs import Recorder
 from repro.serving.scheduler import Request
 
 # cfg fields that must agree between target and draft: both models route
@@ -101,6 +102,12 @@ class SpeculativeEngine(ServeEngine):
                 "ROADMAP.md) — serve unsharded or use ServeEngine")
         if spec_k < 1:
             raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        # acceptance telemetry has always been on for this engine (the
+        # PR-5 ad-hoc `stats` dict) — it now lives on the obs registry, so
+        # default to a metrics-only recorder instead of the NullRecorder
+        # to keep `stats` / `acceptance_rate` working out of the box
+        if kwargs.get("recorder") is None:
+            kwargs["recorder"] = Recorder(trace=False)
         super().__init__(params, cfg, **kwargs)
         self.spec_k = int(spec_k)
         self.draft_cfg = draft_cfg if draft_cfg is not None else self.cfg
@@ -115,14 +122,14 @@ class SpeculativeEngine(ServeEngine):
         # the scheduler must grow pages to cover the window up front
         self.sched.lookahead = self.spec_k + 1
         # mirror of the target pool: same page ids, the draft model's KV
+        # (the shared allocator keeps its own recorder, so pool counters
+        # are not double-counted; draft swap traffic IS counted — swap
+        # copies both pools)
         self.kv_draft = PagedKVCache(
             self.cfg, num_pages=self.kv.num_pages, page_size=self.page_size,
-            dtype=self.cd, allocator=self.kv.allocator)
+            dtype=self.cd, allocator=self.kv.allocator, recorder=self.obs)
         assert self.kv_draft.trash == self.kv.trash
         self._draft_host: Dict[int, HostKV] = {}  # uid → swapped draft KV
-        # engine-wide telemetry (per-request counters live on Request)
-        self.stats = {"rounds": 0, "proposed": 0, "accepted": 0,
-                      "emitted": 0}
 
         cfg_t, cfg_d, cd, k = self.cfg, self.draft_cfg, self.cd, self.spec_k
 
@@ -189,6 +196,12 @@ class SpeculativeEngine(ServeEngine):
         self._round = jax.jit(_round, donate_argnums=(11, 12))
         self._round_greedy = jax.jit(_round_greedy, donate_argnums=(6, 7))
         self._prefill_pair = jax.jit(_prefill_pair, donate_argnums=(6, 7))
+        if self.obs:
+            self.obs.register_jit_site("spec.round", self._round)
+            self.obs.register_jit_site("spec.round_greedy",
+                                       self._round_greedy)
+            self.obs.register_jit_site("spec.prefill_pair",
+                                       self._prefill_pair)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -216,14 +229,38 @@ class SpeculativeEngine(ServeEngine):
 
     # -- telemetry ---------------------------------------------------------
     @property
+    def stats(self) -> Dict[str, int]:
+        """The PR-5 telemetry dict, now a **view over the obs registry**
+        (one source of truth with the Prometheus exposition and the
+        benchmark cells).  Keys are back-compatible — ``rounds`` counts
+        per-request round participations, ``proposed``/``accepted`` count
+        draft proposals, ``emitted`` counts every token a round appended
+        — plus the PR-7 split of the final window token into
+        ``corrections`` (residual resample on rejection) and ``bonuses``
+        (extra draw on full acceptance).  Conservation invariant, pinned
+        by tests/test_speculative.py::
+
+            emitted == accepted + corrections + bonuses
+        """
+        v = self.obs.registry.value
+        return {"rounds": int(v("spec_request_rounds_total")),
+                "proposed": int(v("spec_proposed_total")),
+                "accepted": int(v("spec_accepted_total")),
+                "emitted": int(v("spec_emitted_total")),
+                "corrections": int(v("spec_corrections_total")),
+                "bonuses": int(v("spec_bonuses_total"))}
+
+    @property
     def acceptance_rate(self) -> float:
         """Engine-wide fraction of verified proposals accepted so far."""
-        return self.stats["accepted"] / max(1, self.stats["proposed"])
+        return (self.obs.registry.value("spec_accepted_total")
+                / max(1, self.obs.registry.value("spec_proposed_total")))
 
     @property
     def mean_emitted_per_round(self) -> float:
         """Tokens emitted per request per draft+verify round (1 .. k+1)."""
-        return self.stats["emitted"] / max(1, self.stats["rounds"])
+        return (self.obs.registry.value("spec_emitted_total")
+                / max(1, self.obs.registry.value("spec_request_rounds_total")))
 
     # -- API ---------------------------------------------------------------
     def cancel(self, uid: int) -> bool:
@@ -251,6 +288,9 @@ class SpeculativeEngine(ServeEngine):
             self._run_prefill_chunk(plan.prefill, finished)
         if plan.decode:
             self._run_spec_round(plan.decode, finished)
+        if self.obs:
+            self.obs.sample_pool(self.kv.allocator)
+            self.obs.poll_jit()
         return finished
 
     # -- internals ---------------------------------------------------------
@@ -290,7 +330,10 @@ class SpeculativeEngine(ServeEngine):
             table[row, : len(req.pages)] = req.pages
         seed, t0, temp, top_k, top_p = S.batch_rows(decode, self.max_batch)
 
-        if np.all(temp <= 0.0):
+        obs = self.obs
+        tw0 = obs.now() if obs else 0.0
+        greedy = bool(np.all(temp <= 0.0))
+        if greedy:
             # all-greedy batch (inactive rows default to T=0): the fast
             # path skips the sampling machinery — same accepted/emit
             # contract, bit-identical tokens
@@ -309,24 +352,41 @@ class SpeculativeEngine(ServeEngine):
                 self.kv.buffers, self.kv_draft.buffers)
         accepted = np.asarray(accepted)  # (B,)    accepted-prefix lengths
         emit = np.asarray(emit)          # (B, k+1) tokens to emit per row
+        if obs:
+            # np.asarray above already pulled the round to host: tw1
+            # covers the real wall window without adding a sync
+            tw1 = obs.now()
+            obs.on_decode(decode, tw0, tw1, name="spec-round")
+            obs.on_spec_round("greedy" if greedy else "sampled")
 
         for row, req in decode:
             w = int(n_valid[row])
             a = int(accepted[row])
             req.spec_rounds += 1
             req.spec_proposed += w - 1
-            req.spec_accepted += a
-            self.stats["rounds"] += 1
-            self.stats["proposed"] += w - 1
-            self.stats["accepted"] += a
             # emit accepted proposals + the correction/bonus token,
             # re-checking the budget after every token exactly like the
             # plain engine's one-token steps (eos truncates the window)
+            emitted_n = 0
             for tok in emit[row, : a + 1]:
                 req.generated.append(int(tok))
-                self.stats["emitted"] += 1
+                emitted_n += 1
                 if req.budget_reached(self.max_len):
                     break
+            # truncation-aware accounting: an eos inside the window stops
+            # emission early, and only tokens that actually landed count —
+            # so `emitted == accepted + corrections + bonuses` holds by
+            # construction (the window's final token is the correction on
+            # rejection, the bonus draw on full acceptance)
+            acc_emitted = min(emitted_n, a)
+            final_emitted = emitted_n == a + 1
+            correction = 1 if final_emitted and a < w - 1 else 0
+            bonus = 1 if final_emitted and a == w - 1 else 0
+            req.spec_accepted += acc_emitted
+            if obs:
+                obs.on_spec_row(w - 1, acc_emitted, correction, bonus,
+                                emitted_n)
+                obs.on_tokens(req, emitted_n, tw1)
             if req.budget_reached(self.max_len):
                 self.sched.retire(req)
                 finished.append(req)

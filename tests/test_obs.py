@@ -1,0 +1,347 @@
+"""Observability suite (PR 7).
+
+The load-bearing property: recording is **observation only** — engines
+driven with a live :class:`~repro.serving.obs.Recorder` must emit token
+streams bit-identical to the same engines with recording off, through
+the paged, fixed-slot and speculative paths, including under
+page-pressure eviction.  Plus the subsystem's own contracts: the
+Prometheus exposition parses, the Chrome trace is schema-valid with
+sorted non-overlapping spans per request lane, the ``NullRecorder``
+default is a guaranteed no-op, and ``REPRO_LOG`` drives the leveled
+logger.
+"""
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving import (NULL_RECORDER, FixedSlotEngine, MetricsRegistry,
+                           NullRecorder, Recorder, ServeEngine,
+                           SpeculativeEngine, validate_chrome_trace,
+                           validate_prometheus)
+from repro.serving.obs import (Counter, Histogram, Tracer, log, log_enabled,
+                               summary_table)
+
+PROMPTS = [[1, 2, 3], [7, 5], [9, 9, 9, 2], [4, 4, 1, 1, 5, 6, 7],
+           [3, 1], list(range(1, 21))]  # the PR-4 differential workload
+
+# the PR-4 eviction workload: a pool too small for the request set, so
+# recording must survive (and observe) host swap without changing streams
+EVICT_KWARGS = dict(max_batch=3, page_size=4, prefill_chunk=4, num_pages=9)
+
+
+def _tiny_cfg():
+    cfg = get_config("qwen3-14b", reduced=True)
+    return dataclasses.replace(cfg, num_layers=2, d_model=64, d_ff=128,
+                               vocab_size=64, num_heads=2, num_kv_heads=1,
+                               head_dim=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Registry / exporter units.
+# ---------------------------------------------------------------------------
+
+
+def test_counter_is_monotonic():
+    c = Counter("x_total")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="decrease"):
+        c.inc(-1)
+
+
+def test_histogram_buckets_and_quantiles():
+    h = Histogram("lat_seconds", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    assert h.count == 4 and h.counts == [1, 2, 1, 0]
+    assert h.sum == pytest.approx(6.05)
+    assert h.mean == pytest.approx(6.05 / 4)
+    assert 0.1 <= h.quantile(0.5) <= 1.0   # median falls in (0.1, 1.0]
+    assert h.quantile(0.99) > 1.0
+    h.observe(100.0)                        # lands in +Inf
+    assert h.counts[-1] == 1
+    with pytest.raises(ValueError, match="sorted"):
+        Histogram("bad", buckets=(1.0, 0.1))
+
+
+def test_registry_prometheus_exposition():
+    r = MetricsRegistry()
+    r.counter("req_total", "requests", kind="a").inc(3)
+    r.counter("req_total", "requests", kind="b").inc()
+    r.gauge("pool_free", "free pages").set(7)
+    h = r.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    text = r.to_prometheus()
+    assert validate_prometheus(text) == []
+    assert '# TYPE req_total counter' in text
+    assert 'req_total{kind="a"} 3' in text
+    assert 'pool_free 7' in text
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 2' in text
+    assert 'lat_seconds_count 2' in text
+    # same value through the read API
+    assert r.value("req_total", kind="a") == 3
+    assert r.sum_values("req_total") == 4
+    # one name cannot be two metric types
+    with pytest.raises(ValueError, match="registered"):
+        r.gauge("req_total")
+
+
+def test_validators_reject_malformed():
+    assert validate_prometheus("9bad_name 1\n")
+    assert validate_prometheus("x_total nan-ish\n")
+    assert validate_chrome_trace({}) == ["missing traceEvents key"]
+    bad = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0, "dur": 10.0},
+        {"name": "b", "ph": "X", "pid": 1, "tid": 1, "ts": 5.0, "dur": 10.0},
+    ]}
+    assert any("overlaps" in e for e in validate_chrome_trace(bad))
+    unsorted = {"traceEvents": [
+        {"name": "a", "ph": "i", "s": "t", "pid": 1, "tid": 1, "ts": 5.0},
+        {"name": "b", "ph": "i", "s": "t", "pid": 1, "tid": 1, "ts": 1.0},
+    ]}
+    assert any("sorted" in e for e in validate_chrome_trace(unsorted))
+
+
+def test_tracer_lanes_and_export():
+    fake = [0.0]
+
+    def clock():
+        fake[0] += 1.0
+        return fake[0]
+
+    tr = Tracer(clock=clock)
+    tr.span(1, "queued", 2.0, 3.0)
+    tr.span(Tracer.ENGINE_TID, "decode", 3.0, 4.0, rows=2)
+    obj = tr.to_chrome()
+    assert validate_chrome_trace(obj) == []
+    names = {e["args"]["name"] for e in obj["traceEvents"]
+             if e["ph"] == "M"}
+    assert names == {"engine", "req 0"}  # tid 1 is request uid 0
+    spans = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert [s["name"] for s in spans] == ["queued", "decode"]
+    assert spans[1]["args"]["rows"] == 2
+
+
+# ---------------------------------------------------------------------------
+# NullRecorder: the zero-overhead-off guarantee.
+# ---------------------------------------------------------------------------
+
+
+def test_null_recorder_noop_guarantee():
+    """Engines guard every hook with ``if obs:`` — so the default must be
+    falsy — and any un-guarded call must still be a harmless no-op that
+    allocates no state on the recorder."""
+    n = NULL_RECORDER
+    assert isinstance(n, NullRecorder)
+    assert not n            # the `if obs:` guard compiles the hook away
+    assert n.enabled is False
+    # every hook (present or future) resolves to the same shared no-op
+    assert n.on_submit(object()) is None
+    assert n.on_decode([], 0.0, 0.0) is None
+    assert n.some_hook_added_next_year(1, 2, kw=3) is None
+    assert n.on_tokens is n.poll_jit  # one function object, no per-call state
+    with pytest.raises(AttributeError):
+        n.__html__  # dunders are not swallowed
+    # __slots__ = (): a NullRecorder cannot accumulate state at all
+    with pytest.raises(AttributeError):
+        n.x = 1
+
+
+def test_engines_default_to_null_recorder(setup):
+    cfg, params = setup
+    assert ServeEngine(params, cfg, max_batch=1, max_len=64).obs is \
+        NULL_RECORDER
+    ssm = get_config("mamba2-370m", reduced=True)
+    fixed = FixedSlotEngine(MD.init_params(ssm, jax.random.PRNGKey(0)), ssm,
+                            slots=1, max_len=32)
+    assert fixed.obs is NULL_RECORDER
+    # the speculative engine keeps telemetry always-on (PR-5 `stats`
+    # back-compat): metrics-only recorder, no tracer
+    spec = SpeculativeEngine(params, cfg, params, max_batch=1, max_len=64)
+    assert isinstance(spec.obs, Recorder) and spec.obs.tracer is None
+
+
+# ---------------------------------------------------------------------------
+# Recorder-on vs recorder-off differentials (the hard requirement).
+# ---------------------------------------------------------------------------
+
+
+def _streams(engine_factory):
+    eng = engine_factory()
+    reqs = [eng.submit(p, max_new_tokens=8) for p in PROMPTS]
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    return [list(r.generated) for r in reqs], eng
+
+
+def test_paged_bitexact_with_recording_under_eviction(setup):
+    """Recording on vs off through the paged engine on the PR-4 eviction
+    workload (host swap + restart evictions happen WHILE spans and swap
+    bytes are recorded) — streams must be bit-identical."""
+    cfg, params = setup
+    off, _ = _streams(lambda: ServeEngine(params, cfg, max_len=64,
+                                          **EVICT_KWARGS))
+    rec = Recorder()
+    on, eng = _streams(lambda: ServeEngine(params, cfg, max_len=64,
+                                           recorder=rec, **EVICT_KWARGS))
+    assert on == off
+    v = rec.registry.value
+    assert v("serve_requests_submitted_total") == len(PROMPTS)
+    assert v("serve_requests_finished_total") == len(PROMPTS)
+    evictions = (v("serve_evicted_total", kind="swap")
+                 + v("serve_evicted_total", kind="restart"))
+    assert evictions > 0, "workload was supposed to trigger eviction"
+    if v("serve_evicted_total", kind="swap"):
+        assert rec.registry.sum_values("serve_swap_bytes_total") > 0
+    # latency histograms: one TTFT/TPOT sample per request, ITL per gap
+    assert rec.registry.find("serve_ttft_seconds")[0].count == len(PROMPTS)
+    assert rec.registry.find("serve_tpot_seconds")[0].count == len(PROMPTS)
+    assert rec.registry.find("serve_batch_occupancy")[0].count > 0
+    # token conservation: generated = decode + one first-token per request
+    assert (v("serve_generated_tokens_total")
+            == v("serve_decode_tokens_total") + len(PROMPTS))
+    # >= : a restart eviction legitimately re-prefills its victim
+    assert v("serve_prefill_tokens_total") >= sum(map(len, PROMPTS))
+    # every page observed back in the pool at the end
+    assert v("serve_pool_pages_used") == 0
+    assert eng.kv.allocator.in_use == 0
+
+
+def test_fixed_slot_bitexact_with_recording(setup):
+    cfg, params = setup
+    off, _ = _streams(lambda: FixedSlotEngine(params, cfg, slots=2,
+                                              max_len=64))
+    rec = Recorder()
+    on, _ = _streams(lambda: FixedSlotEngine(params, cfg, slots=2,
+                                             max_len=64, recorder=rec))
+    assert on == off
+    v = rec.registry.value
+    assert v("serve_requests_submitted_total") == len(PROMPTS)
+    assert v("serve_requests_finished_total") == len(PROMPTS)
+    assert rec.registry.find("serve_ttft_seconds")[0].count == len(PROMPTS)
+
+
+def test_speculative_bitexact_with_recording(setup):
+    """A tracing recorder through the speculative engine (its default is
+    metrics-only) — streams, acceptance and the stats view must agree."""
+    cfg, params = setup
+
+    def mk(recorder=None):
+        kw = dict(spec_k=3, max_batch=3, max_len=64, page_size=16,
+                  prefill_chunk=4)
+        if recorder is not None:
+            kw["recorder"] = recorder
+        return SpeculativeEngine(params, cfg, params, **kw)
+
+    off, spec_off = _streams(mk)
+    rec = Recorder()
+    on, spec_on = _streams(lambda: mk(rec))
+    assert on == off
+    assert spec_on.stats == spec_off.stats
+    assert spec_on.acceptance_rate == 1.0  # identical draft
+    v = rec.registry.value
+    assert v("spec_rounds_total", path="greedy") > 0
+    assert v("spec_rounds_total", path="sampled") == 0
+    assert v("serve_requests_finished_total") == len(PROMPTS)
+    # spans exist for the spec rounds
+    names = {e["name"] for e in rec.to_chrome()["traceEvents"]}
+    assert "spec-round" in names
+
+
+# ---------------------------------------------------------------------------
+# Trace schema through a real engine run.
+# ---------------------------------------------------------------------------
+
+
+def test_trace_schema_from_engine_run(setup):
+    cfg, params = setup
+    rec = Recorder()
+    _streams(lambda: ServeEngine(params, cfg, max_len=64, recorder=rec,
+                                 **EVICT_KWARGS))
+    obj = rec.to_chrome()
+    assert validate_chrome_trace(obj) == []
+    # round-trips through JSON (what --trace-out writes)
+    assert validate_chrome_trace(json.loads(json.dumps(obj))) == []
+    events = obj["traceEvents"]
+    lanes = {e["args"]["name"] for e in events if e["ph"] == "M"}
+    assert "engine" in lanes
+    assert {f"req {i}" for i in range(len(PROMPTS))} <= lanes
+    names = {e["name"] for e in events if e["ph"] != "M"}
+    assert {"queued", "prefill[0]", "decode", "finish"} <= names
+    # the eviction workload leaves evict/swap marks in the trace
+    assert any(n.startswith("evict[") for n in names)
+    # Prometheus artifact from the same run parses too
+    assert validate_prometheus(rec.to_prometheus()) == []
+    table = summary_table(rec.registry)
+    assert "TTFT" in table and "page pool" in table
+
+
+def test_jit_cache_miss_counter(setup):
+    """A cold engine compiles decode/prefill/sampler programs — the
+    registered dispatch sites must report those cache misses; a second
+    identical workload must add none."""
+    cfg, params = setup
+    rec = Recorder(trace=False)
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64, recorder=rec)
+    for p in PROMPTS[:2]:
+        eng.submit(p, max_new_tokens=4)
+    eng.run_until_drained()
+    misses = rec.registry.sum_values("jit_cache_misses_total")
+    assert misses >= 2  # decode + prefill compile at least
+    for p in PROMPTS[:2]:
+        eng.submit(p, max_new_tokens=4)
+    eng.run_until_drained()
+    assert rec.registry.sum_values("jit_cache_misses_total") == misses
+
+
+def test_recorder_reset(setup):
+    cfg, params = setup
+    rec = Recorder()
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64, recorder=rec)
+    eng.submit([1, 2, 3], max_new_tokens=4)
+    eng.run_until_drained()
+    assert rec.registry.value("serve_requests_finished_total") == 1
+    rec.reset()  # what benchmarks do after jit warm-up
+    assert rec.registry.value("serve_requests_finished_total") == 0
+    assert rec.registry.find("serve_ttft_seconds")[0].count == 0
+    assert rec.to_chrome()["traceEvents"] == []
+    # warm-up compiles must not re-count as misses after the reset
+    eng.submit([1, 2, 3], max_new_tokens=4)
+    eng.run_until_drained()
+    assert rec.registry.sum_values("jit_cache_misses_total") == 0
+
+
+# ---------------------------------------------------------------------------
+# Leveled logger (REPRO_LOG).
+# ---------------------------------------------------------------------------
+
+
+def test_logger_levels(monkeypatch, capsys):
+    monkeypatch.delenv("REPRO_LOG", raising=False)
+    log("serve", "hello")                      # default: info prints
+    log("serve", "noise", level="debug")       # debug suppressed
+    assert capsys.readouterr().out == "[serve] hello\n"
+    assert log_enabled("info") and not log_enabled("debug")
+
+    monkeypatch.setenv("REPRO_LOG", "debug")
+    log("spec", "detail", level="debug")
+    assert capsys.readouterr().out == "[spec] detail\n"
+
+    monkeypatch.setenv("REPRO_LOG", "quiet")
+    log("serve", "hidden")
+    assert capsys.readouterr().out == ""
+    assert not log_enabled("info")

@@ -211,6 +211,42 @@ def test_request_telemetry(setup):
     assert r.acceptance_rate == 1.0
 
 
+def test_spec_counter_conservation(setup):
+    """Every token a speculative round emits is exactly one of: an
+    accepted proposal, the residual correction on a rejection, or the
+    full-acceptance bonus draw — so ``emitted == accepted + corrections
+    + bonuses`` must hold (PR-7 fixed the asymmetry where ``emitted``
+    alone accounted for eos truncation, which let the identity drift)."""
+    cfg, params, oracle = setup
+
+    def conserve(s):
+        assert s["emitted"] == (s["accepted"] + s["corrections"]
+                                + s["bonuses"]), s
+
+    # garbage draft: plenty of rejections → correction tokens
+    garbage = MD.init_params(cfg, jax.random.PRNGKey(99))
+    bad = _drain_spec(params, cfg, garbage, oracle, spec_k=3)
+    assert bad.stats["corrections"] > 0
+    conserve(bad.stats)
+    # identical draft: full acceptance → bonus tokens, no corrections
+    good = _drain_spec(params, cfg, params, oracle, spec_k=3)
+    assert good.stats["bonuses"] > 0 and good.stats["corrections"] == 0
+    conserve(good.stats)
+    # eos truncating an accepted window mid-emission: the identity must
+    # still hold — only tokens that actually landed are counted
+    eos = oracle[(1, 2, 3)][2]
+    spec = SpeculativeEngine(params, cfg, params, spec_k=4, max_batch=1,
+                             max_len=64, page_size=16, prefill_chunk=4)
+    r = spec.submit([1, 2, 3], max_new_tokens=8, eos_id=eos)
+    spec.run_until_drained()
+    assert r.generated[-1] == eos and len(r.generated) == 3
+    s = spec.stats
+    conserve(s)
+    # prefill emitted the first token; the (truncated) round emitted the
+    # other two, stopping inside the accepted prefix — so no bonus draw
+    assert s["emitted"] == 2 and s["bonuses"] == 0
+
+
 def test_validation(setup):
     cfg, params, _ = setup
     with pytest.raises(ValueError, match="spec_k"):
