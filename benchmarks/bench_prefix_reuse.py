@@ -1,0 +1,112 @@
+"""Prefix-sharing KV reuse: shared-prefix admissions vs cold starts.
+
+The PR-8 tentpole claim, measured: a workload of requests sharing a long
+common stem admits against the radix prefix index — cached full pages map
+read-only, the partially-matched page COW-clones, and chunked prefill
+runs only the uncovered tail — so time-to-first-token drops versus an
+identical engine with ``prefix_cache=False`` that re-prefills the stem
+for every request.
+
+Both engines are primed with one stem-bearing request (warming the jit
+caches, and — on the warm engine — populating the index), the recorder
+is reset, and the same shared-stem workload is drained.  Emitted cells
+(all read from the PR-7 metrics registry):
+
+  * ``serve/prefix_reuse/warm``  — TTFT/tok_s with the radix index on,
+    plus prefix-hit and reused-token counters;
+  * ``serve/prefix_reuse/cold``  — the same workload, index off;
+  * ``serve/prefix_reuse/warm_vs_cold`` — the gated record:
+    ``ttft_ratio`` = cold TTFT / warm TTFT (must stay ≥ the
+    ``check_trajectory.py --min-prefix-ratio`` floor) and ``hits`` /
+    ``reused_tokens`` (must be > 0: the reuse path cannot silently fall
+    out of the measured surface).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only prefix_reuse
+"""
+import dataclasses
+import time
+
+import jax
+
+from benchmarks.common import emit
+
+STEM_LEN = 24   # 3 prefill chunks of shared stem per request
+PAGE_SIZE = 8
+CHUNK = 8
+
+
+def _tiny_cfg():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-14b", reduced=True)
+    return dataclasses.replace(
+        cfg,
+        num_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab_size=128,
+        num_heads=2,
+        num_kv_heads=1,
+        head_dim=32,
+    )
+
+
+def run(requests: int = 8, max_new: int = 4) -> None:
+    from repro.models import model as MD
+    from repro.serving import Recorder, ServeEngine
+
+    cfg = _tiny_cfg()
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    stem = [(11 * j) % cfg.vocab_size for j in range(STEM_LEN)]
+    prompts = [stem + [i + 1, i + 2] for i in range(requests)]
+
+    def measure(prefix_cache):
+        rec = Recorder(trace=False)
+        eng = ServeEngine(params, cfg, max_batch=2, max_len=64,
+                          page_size=PAGE_SIZE, prefill_chunk=CHUNK,
+                          prefix_cache=prefix_cache, recorder=rec)
+        # prime: warms the compiled prefill/decode and (warm engine only)
+        # indexes the stem, so every measured admission can hit
+        eng.submit(stem + [125], max_new_tokens=2)
+        eng.run_until_drained()
+        rec.reset()
+        for p in prompts:
+            eng.submit(p, max_new_tokens=max_new)
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        reg = rec.registry
+        return {
+            "dt": dt,
+            "n_tok": int(reg.value("serve_generated_tokens_total")),
+            "ttft_ms": reg.find("serve_ttft_seconds")[0].mean * 1e3,
+            "hits": int(reg.value("serve_prefix_lookups_total",
+                                  result="hit")),
+            "reused": int(reg.value("serve_prefix_reused_tokens_total")),
+            "cow": int(reg.value("serve_cow_clones_total")),
+        }
+
+    cells = {}
+    for kind, on in (("cold", False), ("warm", True)):
+        c = cells[kind] = measure(on)
+        emit(
+            f"serve/prefix_reuse/{kind}",
+            c["dt"] / max(c["n_tok"], 1) * 1e6,
+            f"tok_s={c['n_tok'] / max(c['dt'], 1e-9):.1f};"
+            f"ttft_ms={c['ttft_ms']:.2f};hits={c['hits']};"
+            f"reused_tokens={c['reused']};cow_clones={c['cow']};"
+            f"requests={requests};stem={STEM_LEN};max_new={max_new}",
+        )
+    warm, cold = cells["warm"], cells["cold"]
+    emit(
+        "serve/prefix_reuse/warm_vs_cold",
+        0.0,
+        f"ttft_ratio={cold['ttft_ms'] / max(warm['ttft_ms'], 1e-9):.2f};"
+        f"hits={warm['hits']};reused_tokens={warm['reused']};"
+        f"warm_ttft_ms={warm['ttft_ms']:.2f};"
+        f"cold_ttft_ms={cold['ttft_ms']:.2f}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -26,7 +26,14 @@ Checks, in order:
      (``serve/mesh*/fixed|paged/...``) must carry numeric ``occupancy``
      (> 0 rows) and ``ttft_ms`` (> 0) cells: PR 7 derives benchmark
      numbers from the serving metrics registry, and a refactor cannot
-     silently drop the registry-backed cells from the measured surface.
+     silently drop the registry-backed cells from the measured surface;
+  7. **the prefix-reuse claim** — every ``serve/prefix_reuse/
+     warm_vs_cold`` record shows shared-prefix TTFT at or below cold-
+     start TTFT (``ttft_ratio`` = cold/warm ≥ ``--min-prefix-ratio``,
+     default 1.0) with non-zero prefix-hit and reused-token counters
+     from the metrics registry (PR 8: the radix-index admission path
+     cannot silently fall out of the measured surface).  Presence is
+     enforced by coverage against ``BENCH_PR8.json``.
 
 Absolute µs numbers are *not* compared — CI machines vary too much; the
 trajectory tracks structure and engine-vs-engine ordering, which are
@@ -56,7 +63,7 @@ def _parse_derived(derived: str) -> dict:
 
 
 def check(baseline: dict, new: dict, min_ratio: float,
-          min_spec_ratio: float = 1.0) -> list:
+          min_spec_ratio: float = 1.0, min_prefix_ratio: float = 1.0) -> list:
     errors = []
     if not new.get("ok", False):
         errors.append(f"new run not ok: failed={new.get('failed')} "
@@ -103,6 +110,23 @@ def check(baseline: dict, new: dict, min_ratio: float,
             errors.append(
                 f"{rec['name']}: acceptance {acc!r} is not a number in "
                 f"[0, 1]")
+    for rec in [r for r in new.get("records", [])
+                if "/prefix_reuse/warm_vs_cold" in r["name"]]:
+        d = _parse_derived(rec["derived"])
+        ratio = d.get("ttft_ratio")
+        if not isinstance(ratio, float):
+            errors.append(f"{rec['name']}: no ttft_ratio in derived")
+        elif ratio < min_prefix_ratio:
+            errors.append(
+                f"{rec['name']}: shared-prefix TTFT at {1 / ratio:.2f}x "
+                f"cold start (cold/warm {ratio:.2f} < required "
+                f"{min_prefix_ratio:.2f})")
+        for key in ("hits", "reused_tokens"):
+            v = d.get(key)
+            if not isinstance(v, float) or v <= 0.0:
+                errors.append(
+                    f"{rec['name']}: {key} {v!r} is not positive — the "
+                    f"prefix-reuse path went unmeasured")
     engine_recs = [r for r in new.get("records", [])
                    if r["name"].startswith("serve/")
                    and ("/paged/" in r["name"] or "/fixed/" in r["name"])]
@@ -125,11 +149,15 @@ def main(argv=None) -> int:
                     help="required paged/fixed tokens-per-second ratio")
     ap.add_argument("--min-spec-ratio", type=float, default=1.0,
                     help="required speculative/plain tokens-per-second ratio")
+    ap.add_argument("--min-prefix-ratio", type=float, default=1.0,
+                    help="required cold/warm TTFT ratio for shared-prefix "
+                         "admissions (prefix reuse must not slow TTFT)")
     args = ap.parse_args(argv)
 
     baseline = json.loads(Path(args.baseline).read_text())
     new = json.loads(Path(args.new).read_text())
-    errors = check(baseline, new, args.min_ratio, args.min_spec_ratio)
+    errors = check(baseline, new, args.min_ratio, args.min_spec_ratio,
+                   args.min_prefix_ratio)
     if errors:
         for e in errors:
             print(f"[trajectory] FAIL: {e}", file=sys.stderr)

@@ -18,7 +18,8 @@ from pathlib import Path
 # execution order: cheap analytic sweeps first, end-to-end serving last
 MODULES = ("fig1_scaling", "fig11_scalability", "fig12_problem_size",
            "fig13_pareto", "table2_e2e", "fig10_depth", "fig9_pruning",
-           "resolution_configs", "serve_throughput", "speculative")
+           "resolution_configs", "serve_throughput", "prefix_reuse",
+           "speculative")
 
 
 def main(argv=None) -> None:

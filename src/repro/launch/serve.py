@@ -18,10 +18,15 @@ Examples:
       --reduced --out /tmp/lm_bundle
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
       --artifact /tmp/lm_bundle --speculative --spec-k 3
+
+  # async HTTP front-end: NDJSON token streaming on localhost:8080
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
+      --http --port 8080 --metrics /tmp/serve.prom
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
 import time
 from pathlib import Path
@@ -33,9 +38,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.data import TokenStream
 from repro.launch.mesh import make_serve_mesh
 from repro.models import model as MD
-from repro.serving import (FixedSlotEngine, Recorder, SamplingParams,
-                           ServeEngine, SpeculativeEngine, log,
-                           summary_table)
+from repro.serving import (AsyncServer, Recorder, SamplingParams,
+                           load_engine, log, summary_table)
 
 
 def _artifact_kind(path):
@@ -79,6 +83,52 @@ def _resolve_mesh(args):
     return mesh
 
 
+def _cli_prompts(args, cfg):
+    """``--prompt`` token lists when given, else ``--requests`` synthetic
+    prompts from the deterministic TokenStream."""
+    if args.prompt:
+        out = []
+        for spec in args.prompt:
+            try:
+                out.append([int(t) for t in spec.replace(",", " ").split()])
+            except ValueError:
+                raise SystemExit(f"--prompt must be token ids, got {spec!r}")
+        return out
+    stream = TokenStream(vocab_size=cfg.vocab_size, batch_size=1, seq_len=16)
+    return [[int(t) for t in stream.batch(i)["tokens"][0][:8]]
+            for i in range(args.requests)]
+
+
+def _serve_http(engine, args, rec) -> None:
+    """Run the asyncio front-end until interrupted, then dump telemetry."""
+    server = AsyncServer(engine, host=args.host, port=args.port,
+                         rate_limit=args.rate_limit,
+                         rate_burst=args.rate_burst)
+
+    async def _run():
+        await server.start()
+        try:
+            await server.serve_forever()
+        except asyncio.CancelledError:
+            pass
+        finally:
+            await server.stop()
+
+    try:
+        asyncio.run(_run())
+    except KeyboardInterrupt:
+        log("serve", "interrupted; shutting down")
+    if rec is not None:
+        print(summary_table(rec.registry))
+        if args.metrics:
+            rec.write_metrics(args.metrics)
+            log("serve", f"metrics (Prometheus text format) → {args.metrics}")
+        if args.trace_out:
+            rec.write_trace(args.trace_out)
+            log("serve", f"trace (Chrome trace-event JSON) → "
+                f"{args.trace_out}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
@@ -104,6 +154,9 @@ def main() -> None:
                     help="force an engine; default: paged (continuous "
                          "batching) when the family supports it, else fixed "
                          "slots")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix prefix reuse (paged engine): every "
+                         "request prefills from scratch")
     ap.add_argument("--amm", action="store_true",
                     help="serve MLPs through the LUT-MU path")
     ap.add_argument("--amm-backend", default="auto",
@@ -144,6 +197,26 @@ def main() -> None:
                          "'auto' to use the mesh recorded in the --artifact "
                          "manifest; default: single-device")
     ap.add_argument("--ckpt")
+    ap.add_argument("--prompt", action="append", metavar="TOKENS",
+                    help="explicit prompt as space/comma-separated token "
+                         "ids (repeatable); replaces the synthetic "
+                         "TokenStream requests")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP instead of draining a synthetic "
+                         "batch: POST /v1/generate streams NDJSON tokens, "
+                         "GET /metrics exposes Prometheus text format, "
+                         "GET /healthz answers ok (see docs/api.md)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="HTTP bind address (default 127.0.0.1)")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="HTTP port (0 = ephemeral; printed on startup)")
+    ap.add_argument("--rate-limit", type=float, default=None, metavar="RPS",
+                    help="per-tenant request rate limit (token bucket, "
+                         "requests/second; X-Tenant header keys the "
+                         "bucket); over-limit requests get 429")
+    ap.add_argument("--rate-burst", type=float, default=None,
+                    help="token-bucket burst size (default: max(1, "
+                         "rate-limit))")
     ap.add_argument("--metrics", metavar="PATH",
                     help="record serving metrics (TTFT/TPOT/ITL histograms, "
                          "pool gauges, speculative acceptance, ...), print "
@@ -177,22 +250,17 @@ def main() -> None:
     use_paged = (args.engine or
                  ("paged" if MD.supports_paged(cfg) else "fixed")) == "paged"
     art_kind = _artifact_kind(args.artifact) if args.artifact else None
-    # one recorder feeds the summary table, the Prometheus snapshot and
-    # the Chrome trace; without the flags engines keep the NullRecorder
-    # (zero-overhead-off — see docs/observability.md)
+    # one recorder feeds the summary table, the Prometheus snapshot, the
+    # Chrome trace and GET /metrics; without the flags engines keep the
+    # NullRecorder (zero-overhead-off — see docs/observability.md)
     rec = (Recorder(trace=bool(args.trace_out))
-           if (args.metrics or args.trace_out) else None)
-    if use_paged:
-        cls = ServeEngine
-        kwargs = dict(max_batch=max_batch, max_len=args.max_len,
-                      page_size=args.page_size,
-                      prefill_chunk=args.prefill_chunk,
-                      num_pages=args.num_pages, compute_dtype=dtype,
-                      mesh=mesh, recorder=rec)
-    else:
-        cls = FixedSlotEngine
-        kwargs = dict(slots=max_batch, max_len=args.max_len,
-                      compute_dtype=dtype, mesh=mesh, recorder=rec)
+           if (args.metrics or args.trace_out or args.http) else None)
+    kwargs = dict(max_batch=max_batch, max_len=args.max_len,
+                  page_size=args.page_size,
+                  prefill_chunk=args.prefill_chunk,
+                  num_pages=args.num_pages,
+                  prefix_cache=not args.no_prefix_cache,
+                  compute_dtype=dtype, mesh=mesh, recorder=rec)
 
     if args.speculative:
         if not use_paged:
@@ -204,8 +272,7 @@ def main() -> None:
         if args.spec_k is not None:
             kwargs["spec_k"] = args.spec_k
         if art_kind == "bundle":
-            engine = SpeculativeEngine.from_bundle(args.artifact, params,
-                                                   cfg, **kwargs)
+            engine = load_engine(args.artifact, params, cfg, **kwargs)
         elif art_kind is not None:
             raise SystemExit(
                 f"--speculative needs a target+draft bundle artifact, got "
@@ -228,20 +295,22 @@ def main() -> None:
                 target_resolution="int8",
                 draft_resolution=args.draft_resolution,
                 spec_k=kwargs["spec_k"])
-            engine = SpeculativeEngine.from_artifacts(
-                res.target, res.draft, params, cfg, **kwargs)
-    elif art_kind == "bundle":
-        # plain serving of a bundle = its full-resolution target half (the
-        # stream-defining model — and the speculative differential oracle)
-        engine = cls.from_artifact(Path(args.artifact) / "target", params,
-                                   cfg, **kwargs)
-    elif args.artifact:
-        engine = cls.from_artifact(args.artifact, params, cfg, **kwargs)
+            engine = load_engine((res.target, res.draft), params, cfg,
+                                 **kwargs)
     else:
-        engine = cls(params, cfg, **kwargs)
-    stream = TokenStream(vocab_size=cfg.vocab_size, batch_size=1, seq_len=16)
-    for i in range(args.requests):
-        prompt = [int(t) for t in stream.batch(i)["tokens"][0][:8]]
+        # load_engine sniffs artifact vs bundle (a bundle without
+        # --speculative serves its full-resolution target half — the
+        # stream-defining model and the speculative differential oracle)
+        engine = load_engine(args.artifact, params, cfg,
+                             engine=args.engine or "auto",
+                             speculative=False, **kwargs)
+
+    if args.http:
+        _serve_http(engine, args, rec)
+        return
+
+    prompts = _cli_prompts(args, cfg)
+    for i, prompt in enumerate(prompts):
         # per-request seed: streams stay reproducible (and distinct)
         # however the batch interleaves them
         engine.submit(prompt, max_new_tokens=args.max_new,

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -59,12 +60,37 @@ from repro.models import model as MD
 from repro.models.config import ModelConfig
 from repro.serving import sampling as S
 from repro.serving import scheduler as SCH
+from repro.serving.handle import RequestHandle, _step_engine_async
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.obs import NULL_RECORDER, log
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 
 Array = jax.Array
+
+# loose sampling kwargs `submit` still accepts one release behind a
+# DeprecationWarning (pass a frozen SamplingParams instead)
+_LEGACY_SAMPLING_KW = ("temperature", "top_k", "top_p", "seed")
+
+
+def _resolve_sampling(sampling: Optional[SamplingParams],
+                      legacy: Dict) -> SamplingParams:
+    """Merge the deprecated loose sampling kwargs into a SamplingParams."""
+    unknown = sorted(set(legacy) - set(_LEGACY_SAMPLING_KW))
+    if unknown:
+        raise TypeError(
+            f"submit() got unexpected keyword argument(s) {unknown}")
+    if legacy:
+        warnings.warn(
+            f"submit(**{sorted(legacy)}) loose sampling kwargs are "
+            "deprecated; pass sampling=SamplingParams(...) instead",
+            DeprecationWarning, stacklevel=3)
+        if sampling is not None:
+            raise TypeError(
+                "pass either sampling=SamplingParams(...) or loose "
+                "sampling kwargs, not both")
+        return SamplingParams(**legacy)
+    return sampling if sampling is not None else SamplingParams()
 
 
 def _shape_tree(tree):
@@ -155,7 +181,8 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = None,
                  slots: int = None, max_len: int = 256, page_size: int = 16,
                  prefill_chunk: int = 32, num_pages: int = None,
-                 compute_dtype=jnp.float32, mesh=None, recorder=None):
+                 prefix_cache: bool = True, compute_dtype=jnp.float32,
+                 mesh=None, recorder=None):
         if not MD.supports_paged(cfg):
             raise ValueError(
                 f"family {cfg.family!r} has no paged decode path — serve it "
@@ -189,7 +216,8 @@ class ServeEngine:
             max_batch=self.max_batch, allocator=self.kv.allocator,
             page_size=ps, max_pages_per_seq=mp,
             prefill_chunk=self.prefill_chunk, max_len=max_len,
-            recorder=recorder)
+            prefix_cache=prefix_cache, recorder=recorder)
+        self._driver = None  # set by http.AsyncServer when it owns the loop
 
         if mesh is None:
             self._constrain = MD._id
@@ -233,6 +261,18 @@ class ServeEngine:
     @classmethod
     def from_artifact(cls, artifact_path, params, cfg: ModelConfig,
                       **kwargs) -> "ServeEngine":
+        """Deprecated: use :func:`repro.serving.load_engine` (it sniffs
+        the artifact kind and picks the engine).  Kept one release as a
+        thin shim with identical behaviour."""
+        warnings.warn(
+            "ServeEngine.from_artifact is deprecated; use "
+            "repro.serving.load_engine(artifact_path, params, cfg, "
+            "engine='paged', ...)", DeprecationWarning, stacklevel=2)
+        return cls._from_artifact(artifact_path, params, cfg, **kwargs)
+
+    @classmethod
+    def _from_artifact(cls, artifact_path, params, cfg: ModelConfig,
+                       **kwargs) -> "ServeEngine":
         """Serve a compiled ``amm_lm`` artifact: splice its LUT-MU tables
         into ``params`` (replacing the dense MLPs) and enable the AMM path
         with the artifact's recorded settings.
@@ -249,15 +289,23 @@ class ServeEngine:
         return cls(params, cfg, **kwargs)
 
     # -- API -------------------------------------------------------------
-    def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               eos_id: Optional[int] = None, priority: int = 0,
-               sampling: Optional[SamplingParams] = None) -> Request:
+    def submit(self, prompt: List[int],
+               sampling: Optional[SamplingParams] = None, *,
+               max_new_tokens: int = 16, eos_id: Optional[int] = None,
+               priority: int = 0, **legacy) -> RequestHandle:
+        """Queue a request; returns a :class:`RequestHandle`.
+
+        ``sampling`` is a frozen :class:`SamplingParams` (default greedy);
+        all other options are keyword-only.  Loose ``temperature=`` /
+        ``top_k=`` / ``top_p=`` / ``seed=`` kwargs still work one release
+        behind a ``DeprecationWarning``.
+        """
         req = Request(uid=next(self._uid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
                       priority=priority,
-                      sampling=sampling or SamplingParams())
+                      sampling=_resolve_sampling(sampling, legacy))
         self.sched.submit(req)
-        return req
+        return RequestHandle(self, req)
 
     def cancel(self, uid: int) -> bool:
         return self.sched.cancel(uid)
@@ -266,10 +314,19 @@ class ServeEngine:
     def has_work(self) -> bool:
         return bool(self.sched.live())
 
+    async def _advance_async(self) -> None:
+        await _step_engine_async(self)
+
+    def _clone_pages(self, src: int, dst: int) -> None:
+        """Device copy backing one COW clone (the speculative engine
+        overrides this to clone its draft cache too — both caches share
+        one page table, so a clone must cover both)."""
+        self.kv.clone_page(src, dst)
+
     def step(self) -> List[Request]:
         """One engine iteration: execute the scheduler's plan — swap-outs,
-        swap-ins, at most one prefill chunk, one batched decode — and
-        retire finished requests."""
+        swap-ins, copy-on-write clones, at most one prefill chunk, one
+        batched decode — and retire finished requests."""
         plan = self.sched.schedule()
         resharded = False
         for req, old_pages in plan.swap_out:
@@ -279,6 +336,12 @@ class ServeEngine:
         for req in plan.swap_in:
             self.kv.scatter_host(req.host_kv, req.pages)
             req.host_kv = None
+            resharded = True
+        for clone in plan.cow:
+            if clone.req.cow is None:
+                continue  # dropped: its request was evicted in this plan
+            self._clone_pages(clone.src, clone.dst)
+            self.sched.cow_executed(clone)
             resharded = True
         if resharded and self.mesh is not None:
             # eager swap-in updates drift leaf shardings; restore them so
@@ -331,11 +394,12 @@ class ServeEngine:
                 obs.on_prefill(req, chunk.start // self.prefill_chunk,
                                chunk.n_valid, t0, t1)
                 obs.on_tokens(req, 1, t1, source="prefill")
+            # prefill_finished first — it indexes the prompt pages for
+            # prefix reuse, which a budget-limited request still provides
+            self.sched.prefill_finished(req)
             if req.budget_reached(self.max_len):
                 self.sched.retire(req)
                 finished.append(req)
-            else:
-                self.sched.prefill_finished(req)
         elif obs:
             # non-final chunk: the dispatch window (no host sync happens
             # here, so the span measures host+dispatch work only)
@@ -392,6 +456,7 @@ class FixedSlotEngine:
         self.active: Dict[int, Request] = {}  # slot -> request
         self.pos = np.zeros(slots, dtype=np.int64)  # per-slot next position
         self._uid = itertools.count()
+        self._driver = None  # set by http.AsyncServer when it owns the loop
 
         cache = MD.init_cache(cfg, slots, max_len, compute_dtype)
         if mesh is None:
@@ -434,24 +499,62 @@ class FixedSlotEngine:
     @classmethod
     def from_artifact(cls, artifact_path, params, cfg: ModelConfig,
                       **kwargs) -> "FixedSlotEngine":
+        """Deprecated: use :func:`repro.serving.load_engine` with
+        ``engine='fixed'``.  Kept one release as a thin shim."""
+        warnings.warn(
+            "FixedSlotEngine.from_artifact is deprecated; use "
+            "repro.serving.load_engine(artifact_path, params, cfg, "
+            "engine='fixed', ...)", DeprecationWarning, stacklevel=2)
+        return cls._from_artifact(artifact_path, params, cfg, **kwargs)
+
+    @classmethod
+    def _from_artifact(cls, artifact_path, params, cfg: ModelConfig,
+                       **kwargs) -> "FixedSlotEngine":
         """Serve a compiled ``amm_lm`` artifact through fixed slots (see
-        :meth:`ServeEngine.from_artifact`)."""
+        :meth:`ServeEngine._from_artifact`)."""
         params, cfg = _artifact_params_cfg(artifact_path, params, cfg,
                                            kwargs.get("mesh"))
         return cls(params, cfg, **kwargs)
 
     # -- API -------------------------------------------------------------
-    def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               eos_id: Optional[int] = None, priority: int = 0,
-               sampling: Optional[SamplingParams] = None) -> Request:
+    def submit(self, prompt: List[int],
+               sampling: Optional[SamplingParams] = None, *,
+               max_new_tokens: int = 16, eos_id: Optional[int] = None,
+               priority: int = 0, **legacy) -> RequestHandle:
+        """Queue a request; returns a :class:`RequestHandle` (same
+        contract as :meth:`ServeEngine.submit`)."""
         del priority  # fixed-slot admission is strictly FIFO
         req = Request(uid=next(self._uid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
-                      sampling=sampling or SamplingParams())
+                      sampling=_resolve_sampling(sampling, legacy))
         self.queue.append(req)
         if self.obs:
             self.obs.on_submit(req)
-        return req
+        return RequestHandle(self, req)
+
+    def cancel(self, uid: int) -> bool:
+        """Drop a queued or active request.  Returns False when the uid
+        is unknown or already finished."""
+        for req in list(self.queue):
+            if req.uid == uid:
+                self.queue.remove(req)
+                return self._mark_cancelled(req)
+        for slot, req in list(self.active.items()):
+            if req.uid == uid:
+                del self.active[slot]
+                return self._mark_cancelled(req)
+        return False
+
+    def _mark_cancelled(self, req: Request) -> bool:
+        req.state = SCH.DONE
+        req.cancelled = True
+        req.done = True
+        if self.obs:
+            self.obs.on_cancel(req)
+        return True
+
+    async def _advance_async(self) -> None:
+        await _step_engine_async(self)
 
     def _admit(self) -> List[Request]:
         """Fill free slots: per-request prefill (batch=1 rows of the cache)."""
@@ -462,6 +565,7 @@ class FixedSlotEngine:
         while free and self.queue:
             slot = free.pop(0)
             req = self.queue.popleft()
+            req.state = SCH.RUNNING  # for RequestHandle.status
             if obs:
                 obs.on_admit(req)
                 t0 = obs.now()
@@ -484,6 +588,7 @@ class FixedSlotEngine:
                 obs.on_tokens(req, 1, t1, source="prefill")
             if req.budget_reached(self.max_len):
                 req.done = True
+                req.state = SCH.DONE
                 finished.append(req)
                 free.insert(0, slot)
                 if obs:
@@ -532,6 +637,7 @@ class FixedSlotEngine:
                     or (req.eos_id is not None and tok == req.eos_id)
                     or self.pos[slot] >= self.max_len - 1):
                 req.done = True
+                req.state = SCH.DONE
                 finished.append(req)
                 del self.active[slot]
                 if obs:
@@ -544,7 +650,7 @@ class FixedSlotEngine:
         return _drain(self, max_steps)
 
 
-def make_engine(params, cfg: ModelConfig, **kwargs):
+def _family_engine(params, cfg: ModelConfig, **kwargs):
     """Pick the continuous-batching engine when the family supports paged
     KV, else fall back to fixed slots (mapping ``max_batch`` to ``slots``
     and dropping the paged-only kwargs)."""
@@ -553,6 +659,15 @@ def make_engine(params, cfg: ModelConfig, **kwargs):
     max_batch = kwargs.pop("max_batch", None)
     if max_batch is not None:
         kwargs.setdefault("slots", max_batch)
-    for k in ("page_size", "prefill_chunk", "num_pages"):
+    for k in ("page_size", "prefill_chunk", "num_pages", "prefix_cache"):
         kwargs.pop(k, None)
     return FixedSlotEngine(params, cfg, **kwargs)
+
+
+def make_engine(params, cfg: ModelConfig, **kwargs):
+    """Deprecated: use :func:`repro.serving.load_engine` (``source=None``
+    gives the same family dispatch).  Kept one release as a thin shim."""
+    warnings.warn(
+        "make_engine is deprecated; use repro.serving.load_engine(None, "
+        "params, cfg, ...)", DeprecationWarning, stacklevel=2)
+    return _family_engine(params, cfg, **kwargs)

@@ -11,6 +11,12 @@ lives at ``(page_table[t // page_size], t % page_size)``.
 The allocator is deliberately host-side and strict: double-frees and
 foreign pages raise ``PageError`` (the scheduler fuzz tests drive random
 admit/evict/cancel traces through it and assert the pool is conserved).
+Pages are **refcounted** so several requests (and the scheduler's radix
+prefix index) can map the same physical page read-only: ``alloc`` hands a
+page out at refcount 1, ``share`` increments, ``free`` decrements, and a
+page only returns to the free list when its count reaches zero.  Writers
+never touch a page they merely share — the scheduler plans a
+copy-on-write ``clone_page`` into a freshly allocated page instead.
 
 Swap: evicting a request under page pressure copies its pages to host
 (``gather_host``) before the allocator hands them to someone else; resume
@@ -39,12 +45,16 @@ class PageError(RuntimeError):
 
 
 class PageAllocator:
-    """Free-list allocator over ``num_pages`` fixed-size pages.
+    """Refcounted free-list allocator over ``num_pages`` fixed-size pages.
 
     ``alloc`` is all-or-nothing (returns ``None`` when the request cannot
-    be satisfied — the scheduler then evicts or waits); ``free`` validates
-    every page so leaks and double-frees surface as ``PageError`` instead
-    of silent cache corruption.
+    be satisfied — the scheduler then evicts or waits) and hands pages out
+    at refcount 1.  ``share`` increments the count of an already-live page
+    (prefix reuse: a second request — or the prefix index itself — maps
+    the page read-only).  ``free`` decrements and only returns a page to
+    the free list when its count reaches zero; it still validates every
+    page so leaks, over-frees and foreign pages surface as ``PageError``
+    instead of silent cache corruption.
     """
 
     def __init__(self, num_pages: int, *, recorder=None):
@@ -53,6 +63,7 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: Deque[int] = deque(range(num_pages))
         self._free_set: Set[int] = set(range(num_pages))
+        self._ref: List[int] = [0] * num_pages
         # observability hooks (obs.py); the default NullRecorder is falsy
         # so each hook site costs one truthiness check when disabled
         self.obs = recorder if recorder is not None else NULL_RECORDER
@@ -74,21 +85,45 @@ class PageAllocator:
             return None
         pages = [self._free.popleft() for _ in range(n)]
         self._free_set.difference_update(pages)
+        for p in pages:
+            self._ref[p] = 1
         if self.obs:
             self.obs.on_alloc(n)
         return pages
+
+    def share(self, pages: List[int]) -> None:
+        """Take an extra reference on live pages (prefix reuse)."""
+        for p in pages:
+            if not 0 <= p < self.num_pages:
+                raise PageError(f"page {p} is not part of this pool")
+            if self._ref[p] < 1:
+                raise PageError(f"cannot share free page {p}")
+        for p in pages:
+            self._ref[p] += 1
 
     def free(self, pages: List[int]) -> None:
         for p in pages:
             if not 0 <= p < self.num_pages:
                 raise PageError(f"page {p} is not part of this pool")
-            if p in self._free_set:
+            if p in self._free_set or self._ref[p] < 1:
                 raise PageError(f"double free of page {p}")
+        released = 0
         for p in pages:
-            self._free.append(p)
-            self._free_set.add(p)
-        if self.obs and pages:
-            self.obs.on_free(len(pages))
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+                self._free_set.add(p)
+                released += 1
+        if self.obs and released:
+            self.obs.on_free(released)
+
+    def refcount(self, page: int) -> int:
+        if not 0 <= page < self.num_pages:
+            raise PageError(f"page {page} is not part of this pool")
+        return self._ref[page]
+
+    def is_shared(self, page: int) -> bool:
+        return self.refcount(page) > 1
 
     def free_pages(self) -> Set[int]:
         """Snapshot of the free set (for invariant checks)."""
@@ -155,6 +190,21 @@ class PagedKVCache:
         row = np.full((max_pages,), self.trash, np.int32)
         row[: len(pages)] = pages
         return row
+
+    def clone_page(self, src: int, dst: int) -> None:
+        """Copy-on-write: duplicate physical page ``src`` into ``dst``
+        (all layers, k and v).  The scheduler plans one clone per
+        partially-shared prefix page; the writer's page table then points
+        at ``dst`` while other sharers keep reading ``src``."""
+        self.buffers = {
+            "k": self.buffers["k"].at[:, dst].set(self.buffers["k"][:, src]),
+            "v": self.buffers["v"].at[:, dst].set(self.buffers["v"][:, src]),
+        }
+        if self.obs:
+            k = self.buffers["k"]
+            per_page = int(np.prod([d for i, d in enumerate(k.shape)
+                                    if i != 1])) * k.dtype.itemsize
+            self.obs.on_cow_clone(2 * per_page)
 
     def gather_host(self, pages: List[int]) -> HostKV:
         """Copy the given physical pages to host (swap-out)."""

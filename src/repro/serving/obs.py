@@ -424,6 +424,29 @@ class Recorder:
         self._c_rollback = r.counter(
             "serve_pages_rollback_total",
             "Pages freed by speculative rollback")
+        # prefix-sharing KV reuse (PR-8)
+        self._c_prefix_hit = r.counter(
+            "serve_prefix_lookups_total", "Prefix-index lookups at admission",
+            result="hit")
+        self._c_prefix_miss = r.counter(
+            "serve_prefix_lookups_total", "Prefix-index lookups at admission",
+            result="miss")
+        self._c_prefix_tok = r.counter(
+            "serve_prefix_reused_tokens_total",
+            "Prompt tokens served from cached prefix pages (not prefilled)")
+        self._c_prefix_evict = r.counter(
+            "serve_prefix_pages_evicted_total",
+            "Cached prefix pages reclaimed under pool pressure")
+        self._c_cow_clones = r.counter(
+            "serve_cow_clones_total",
+            "Copy-on-write page clones (partially-shared prefix pages)")
+        self._c_cow_bytes = r.counter(
+            "serve_cow_bytes_total", "Bytes copied by copy-on-write clones")
+        self._h_prefix_len = r.histogram(
+            "serve_cached_prefix_tokens",
+            "Cached-prefix length matched per admission (tokens)",
+            buckets=(0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0,
+                     256.0, 512.0, 1024.0))
         # tokens / steps
         self._c_prefill_tok = r.counter(
             "serve_prefill_tokens_total", "Prompt tokens prefilled (chunked)")
@@ -647,6 +670,23 @@ class Recorder:
         if n_pages:
             self._c_rollback.inc(n_pages)
 
+    # -- prefix-sharing KV reuse -------------------------------------------
+    def on_prefix_lookup(self, covered: int, n_full_pages: int,
+                         partial: bool) -> None:
+        """One admission-time prefix-index lookup: ``covered`` prompt
+        tokens were served from cached pages (0 = miss)."""
+        (self._c_prefix_hit if covered > 0 else self._c_prefix_miss).inc()
+        if covered > 0:
+            self._c_prefix_tok.inc(covered)
+        self._h_prefix_len.observe(float(covered))
+
+    def on_prefix_evict(self, n_pages: int) -> None:
+        self._c_prefix_evict.inc(n_pages)
+
+    def on_cow_clone(self, nbytes: int) -> None:
+        self._c_cow_clones.inc()
+        self._c_cow_bytes.inc(nbytes)
+
     # -- speculative decoding ----------------------------------------------
     def on_spec_round(self, path: str) -> None:
         (self._c_spec_round_greedy if path == "greedy"
@@ -791,6 +831,21 @@ def summary_table(registry: MetricsRegistry) -> str:
         rows.append(("evictions swap/restart",
                      f"{registry.value('serve_evicted_total', kind='swap'):.0f} / "
                      f"{registry.value('serve_evicted_total', kind='restart'):.0f}"))
+    lookups = (registry.value("serve_prefix_lookups_total", result="hit")
+               + registry.value("serve_prefix_lookups_total", result="miss"))
+    if lookups:
+        plen = hist("serve_cached_prefix_tokens")
+        rows.append((
+            "prefix cache hit/miss (reused tokens)",
+            f"{registry.value('serve_prefix_lookups_total', result='hit'):.0f}"
+            f" / "
+            f"{registry.value('serve_prefix_lookups_total', result='miss'):.0f}"
+            f"  ({v('serve_prefix_reused_tokens_total'):.0f} tokens, "
+            f"mean {plen.mean if plen and plen.count else 0.0:.1f}/adm)"))
+        if v("serve_cow_clones_total"):
+            rows.append(("cow clones (bytes)",
+                         f"{v('serve_cow_clones_total'):.0f} "
+                         f"({v('serve_cow_bytes_total'):.0f})"))
     proposed = v("spec_proposed_total")
     if proposed:
         rows.append(("speculative acceptance",

@@ -1,11 +1,21 @@
 """Continuous-batching scheduler: FCFS + priority admission, chunked
-prefill, page-fault eviction, cancellation.
+prefill, prefix-sharing KV reuse, page-fault eviction, cancellation.
 
 Pure host-side logic — no jax arrays — so the fuzz tests can drive
 millions of admit/evict/cancel transitions without touching a model.  The
 engine calls :meth:`Scheduler.schedule` once per step and executes the
-returned :class:`StepPlan` (swap-outs first, then swap-ins, one prefill
-chunk, one batched decode).
+returned :class:`StepPlan` (swap-outs first, then swap-ins, copy-on-write
+clones, one prefill chunk, one batched decode).
+
+Prefix reuse (see ``docs/serving.md``): admission looks the prompt up in
+a :class:`~repro.serving.prefix.RadixPrefixIndex`; the longest cached
+prefix's pages map read-only into the new request's page table (allocator
+refcount +1 per page), a partially-covered page is cloned copy-on-write
+into a fresh page before the request may extend it, and chunked prefill
+starts at the first uncovered token.  Finished prefills insert their
+prompt pages into the index, which holds its own reference per page so
+cached prefixes survive request retirement.  When the pool runs dry the
+scheduler reclaims LRU index leaves *before* evicting live requests.
 
 Request lifecycle::
 
@@ -40,6 +50,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.serving.kv_cache import HostKV, PageAllocator
 from repro.serving.obs import NULL_RECORDER
+from repro.serving.prefix import RadixPrefixIndex
 from repro.serving.sampling import SamplingParams
 
 # request states
@@ -72,6 +83,11 @@ class Request:
     row: Optional[int] = None
     pages: List[int] = dataclasses.field(default_factory=list)
     pf_done: int = 0         # prompt tokens already prefilled
+    # first `shared_prefix` entries of `pages` are read-only shared prefix
+    # pages (refcounted); everything after is this request's to write
+    shared_prefix: int = 0
+    # (src, dst) of a planned-but-not-yet-executed copy-on-write clone
+    cow: Optional[Tuple[int, int]] = None
     host_kv: Optional[HostKV] = None  # swap-out copy while SWAPPED
     # speculative-decoding telemetry (filled by SpeculativeEngine)
     spec_rounds: int = 0     # draft+verify rounds this request took part in
@@ -103,11 +119,26 @@ class PrefillChunk:
 
 
 @dataclasses.dataclass
+class CowClone:
+    """Copy page ``src`` into ``dst`` before ``req``'s prefill chunk runs.
+
+    The scheduler holds an extra reference on ``src`` so it cannot be
+    recycled before the copy; the engine performs the device copy then
+    calls :meth:`Scheduler.cow_executed` to release it.
+    """
+
+    req: Request
+    src: int
+    dst: int
+
+
+@dataclasses.dataclass
 class StepPlan:
     swap_out: List[Tuple[Request, List[int]]] = dataclasses.field(
         default_factory=list)  # (request, pages to copy out) — pages already
     # released to the allocator; the engine must copy them before any write
     swap_in: List[Request] = dataclasses.field(default_factory=list)
+    cow: List[CowClone] = dataclasses.field(default_factory=list)
     prefill: Optional[PrefillChunk] = None
     decode: List[Tuple[int, Request]] = dataclasses.field(
         default_factory=list)  # (row, request)
@@ -116,7 +147,8 @@ class StepPlan:
 class Scheduler:
     def __init__(self, *, max_batch: int, allocator: PageAllocator,
                  page_size: int, max_pages_per_seq: int, prefill_chunk: int,
-                 max_len: int, lookahead: int = 1, recorder=None):
+                 max_len: int, lookahead: int = 1, prefix_cache: bool = True,
+                 recorder=None):
         self.max_batch = max_batch
         # observability: every hook site is ``if self.obs:``-guarded, so
         # the default NullRecorder costs one truthiness check (obs.py)
@@ -126,6 +158,11 @@ class Scheduler:
         self.max_pages_per_seq = max_pages_per_seq
         self.prefill_chunk = prefill_chunk
         self.max_len = max_len
+        # radix prefix index for shared-prefix KV reuse (None disables)
+        self.prefix: Optional[RadixPrefixIndex] = (
+            RadixPrefixIndex(allocator, page_size, recorder=self.obs)
+            if prefix_cache else None)
+        self._cow_pending: List[int] = []  # src pages with a held clone ref
         # tokens a decode step may write per request: 1 for plain decode,
         # k+1 for a speculative verify window (page growth must cover the
         # whole window before the step runs).  Clamped per request by its
@@ -185,7 +222,7 @@ class Scheduler:
     def schedule(self) -> StepPlan:
         plan = StepPlan()
         self._resume(plan)
-        self._admit()
+        self._admit(plan)
         pf = [r for r in self.rows.values() if r.state == PREFILL]
         if pf:
             req = self._ordered(pf)[0]
@@ -211,8 +248,19 @@ class Scheduler:
 
     def prefill_finished(self, req: Request) -> None:
         """Called by the engine once the last chunk ran and the first token
-        was sampled; the request joins the decode batch next step."""
+        was sampled; the request joins the decode batch next step.  Its
+        prompt pages are inserted into the prefix index here — the KV for
+        every prompt position is now resident and final (prompt slots are
+        write-once), so future admissions can map them read-only."""
         req.state = RUNNING
+        if self.prefix is not None and not req.cancelled:
+            self.prefix.insert(req.prompt, req.pages)
+
+    def cow_executed(self, clone: CowClone) -> None:
+        """The engine cloned ``src`` → ``dst``; release the clone ref."""
+        self._cow_pending.remove(clone.src)
+        self.alloc.free([clone.src])
+        clone.req.cow = None
 
     def retire(self, req: Request) -> None:
         self._release(req)
@@ -245,6 +293,28 @@ class Scheduler:
         if req.pages:
             self.alloc.free(req.pages)
             req.pages = []
+        req.shared_prefix = 0
+        self._drop_cow(req)
+
+    def _drop_cow(self, req: Request) -> None:
+        """A request left the device before its planned clone ran (evicted
+        or cancelled in the same plan): release the held src reference.
+        The engine skips executing clones whose ``req.cow`` was cleared."""
+        if req.cow is not None:
+            src = req.cow[0]
+            self._cow_pending.remove(src)
+            self.alloc.free([src])
+            req.cow = None
+
+    def _alloc_reclaim(self, n: int) -> Optional[List[int]]:
+        """``alloc``, reclaiming LRU cached prefixes when the pool is dry —
+        cached pages are strictly lower value than live requests, so the
+        index gives way before any request is evicted."""
+        pages = self.alloc.alloc(n)
+        if pages is None and self.prefix is not None:
+            if self.prefix.evict(n - self.alloc.available):
+                pages = self.alloc.alloc(n)
+        return pages
 
     def _resume(self, plan: StepPlan) -> None:
         for req in self._ordered(list(self.swapped)):
@@ -253,7 +323,7 @@ class Scheduler:
                 break
             need = max(self._pages_for(req.next_pos + 1),
                        req.host_kv.num_pages if req.host_kv else 0)
-            pages = self.alloc.alloc(need)
+            pages = self._alloc_reclaim(need)
             if pages is None:
                 break  # strict order: don't let later requests jump ahead
             req.pages = pages
@@ -265,22 +335,50 @@ class Scheduler:
             if self.obs:
                 self.obs.on_resume(req)
 
-    def _admit(self) -> None:
+    def _admit(self, plan: StepPlan) -> None:
         for req in self._ordered(list(self.waiting)):
             row = self._free_row()
             if row is None:
                 break
-            pages = self.alloc.alloc(self._pages_for(len(req.prompt) + 1))
+            # longest cached prefix: full pages map read-only into this
+            # request's table; a partially-covered page is cloned
+            # copy-on-write; prefill runs only the uncovered tail
+            full: List[int] = []
+            partial = None
+            covered = 0
+            if self.prefix is not None:
+                full, partial, covered = self.prefix.match(req.prompt)
+                # hold references BEFORE any reclaim/alloc below so the
+                # matched pages cannot be evicted out from under us
+                held = full + ([partial[0]] if partial else [])
+                if held:
+                    self.alloc.share(held)
+            pages = self._alloc_reclaim(
+                self._pages_for(len(req.prompt) + 1) - len(full))
             if pages is None:
+                if self.prefix is not None and held:
+                    self.alloc.free(held)
                 break
-            req.pages = pages
+            req.pages = full + pages
+            req.shared_prefix = len(full)
             req.row = row
             self.rows[row] = req
             req.state = PREFILL
-            req.pf_done = 0
+            req.pf_done = covered
+            if partial is not None:
+                # the engine clones src → pages[0] (the table slot right
+                # after the shared full pages) before the prefill chunk;
+                # the share() above keeps src alive until cow_executed
+                clone = CowClone(req, partial[0], pages[0])
+                req.cow = (partial[0], pages[0])
+                self._cow_pending.append(partial[0])
+                plan.cow.append(clone)
             self.waiting.remove(req)
             if self.obs:
                 self.obs.on_admit(req)
+                if self.prefix is not None:
+                    self.obs.on_prefix_lookup(covered, len(full),
+                                              partial is not None)
 
     def _ensure_pages(self, req: Request, n_tokens: int,
                       plan: StepPlan) -> bool:
@@ -288,7 +386,7 @@ class Scheduler:
         evicting if the pool is dry.  Returns False when ``req`` had to
         swap itself out instead."""
         while len(req.pages) * self.page_size < n_tokens:
-            pages = self.alloc.alloc(1)
+            pages = self._alloc_reclaim(1)
             if pages is not None:
                 req.pages += pages
                 continue
@@ -351,17 +449,38 @@ class Scheduler:
 
     # -- invariants (used by the fuzz tests) --------------------------------
     def check_invariants(self) -> None:
-        owned: List[int] = []
+        # refcount conservation: every page's allocator refcount equals
+        # the number of holders — request page-table entries, prefix-index
+        # nodes, and pending copy-on-write sources — and exactly the
+        # zero-ref pages are on the free list
+        holds: Dict[int, int] = {}
         for req in self.live():
-            owned.extend(req.pages)
-        assert len(owned) == len(set(owned)), "page owned by two requests"
+            for p in req.pages:
+                holds[p] = holds.get(p, 0) + 1
+        if self.prefix is not None:
+            for p in self.prefix.pages_held():
+                holds[p] = holds.get(p, 0) + 1
+        for p in self._cow_pending:
+            holds[p] = holds.get(p, 0) + 1
         free = self.alloc.free_pages()
-        assert not (set(owned) & free), "allocated page is on the free list"
-        assert len(owned) + len(free) == self.alloc.num_pages, (
-            f"page leak: {len(owned)} owned + {len(free)} free != "
-            f"{self.alloc.num_pages}")
+        for p in range(self.alloc.num_pages):
+            ref = self.alloc.refcount(p)
+            assert ref == holds.get(p, 0), (
+                f"page {p}: refcount {ref} != {holds.get(p, 0)} holders")
+            assert (ref == 0) == (p in free), (
+                f"page {p}: refcount {ref} but free={p in free}")
+        # copy-on-write never aliases a writer: a physical page sits in
+        # at most one request's *writable* region (everything past its
+        # read-only shared prefix) — sharers clone before writing
+        writers: Dict[int, int] = {}
+        for req in self.rows.values():
+            for p in req.pages[req.shared_prefix:]:
+                writers[p] = writers.get(p, 0) + 1
+        for p, n in writers.items():
+            assert n <= 1, f"page {p} is writable by {n} requests"
         for row, req in self.rows.items():
             assert req.row == row and req.state in (PREFILL, RUNNING)
         for req in self.waiting + self.swapped:
             assert req.row is None
             assert not req.pages, "queued request still holds pages"
+            assert req.cow is None, "queued request has a pending clone"

@@ -66,6 +66,7 @@ regime distributionally (see docs/sampling.md for the proof sketch).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -207,6 +208,18 @@ class SpeculativeEngine(ServeEngine):
     @classmethod
     def from_artifacts(cls, target_art, draft_art, params,
                        cfg: ModelConfig, **kwargs) -> "SpeculativeEngine":
+        """Deprecated: use :func:`repro.serving.load_engine` with a
+        ``(target_art, draft_art)`` source.  Kept one release as a shim."""
+        warnings.warn(
+            "SpeculativeEngine.from_artifacts is deprecated; use "
+            "repro.serving.load_engine((target_art, draft_art), params, "
+            "cfg, ...)", DeprecationWarning, stacklevel=2)
+        return cls._from_artifacts(target_art, draft_art, params, cfg,
+                                   **kwargs)
+
+    @classmethod
+    def _from_artifacts(cls, target_art, draft_art, params,
+                        cfg: ModelConfig, **kwargs) -> "SpeculativeEngine":
         """Build from two loaded/in-memory ``amm_lm`` artifacts: both are
         spliced into the same dense params tree (they share the backbone;
         only the LUT tables differ)."""
@@ -218,6 +231,17 @@ class SpeculativeEngine(ServeEngine):
     @classmethod
     def from_bundle(cls, bundle_path, params, cfg: ModelConfig,
                     **kwargs) -> "SpeculativeEngine":
+        """Deprecated: use :func:`repro.serving.load_engine` (a bundle
+        path is sniffed automatically).  Kept one release as a shim."""
+        warnings.warn(
+            "SpeculativeEngine.from_bundle is deprecated; use "
+            "repro.serving.load_engine(bundle_path, params, cfg, ...)",
+            DeprecationWarning, stacklevel=2)
+        return cls._from_bundle(bundle_path, params, cfg, **kwargs)
+
+    @classmethod
+    def _from_bundle(cls, bundle_path, params, cfg: ModelConfig,
+                     **kwargs) -> "SpeculativeEngine":
         """Serve a compiled target+draft bundle
         (``python -m repro.compiler bundle``).  ``spec_k`` defaults to the
         bundle manifest's recorded suggestion."""
@@ -225,7 +249,7 @@ class SpeculativeEngine(ServeEngine):
 
         target, draft, manifest = load_bundle(bundle_path)
         kwargs.setdefault("spec_k", int(manifest.get("spec_k", 4)))
-        return cls.from_artifacts(target, draft, params, cfg, **kwargs)
+        return cls._from_artifacts(target, draft, params, cfg, **kwargs)
 
     # -- telemetry ---------------------------------------------------------
     @property
@@ -270,8 +294,9 @@ class SpeculativeEngine(ServeEngine):
         return ok
 
     def step(self) -> List[Request]:
-        """One engine iteration: swaps (both caches), at most one prefill
-        chunk (both models), one speculative draft+verify round."""
+        """One engine iteration: swaps (both caches), copy-on-write clones
+        (both caches), at most one prefill chunk (both models), one
+        speculative draft+verify round."""
         plan = self.sched.schedule()
         for req, old_pages in plan.swap_out:
             req.host_kv = self.kv.gather_host(old_pages)
@@ -282,6 +307,11 @@ class SpeculativeEngine(ServeEngine):
             host_d = self._draft_host.pop(req.uid, None)
             if host_d is not None:
                 self.kv_draft.scatter_host(host_d, req.pages)
+        for clone in plan.cow:
+            if clone.req.cow is None:
+                continue  # dropped: its request was evicted in this plan
+            self._clone_pages(clone.src, clone.dst)
+            self.sched.cow_executed(clone)
 
         finished: List[Request] = []
         if plan.prefill is not None:
@@ -294,6 +324,13 @@ class SpeculativeEngine(ServeEngine):
         return finished
 
     # -- internals ---------------------------------------------------------
+    def _clone_pages(self, src: int, dst: int) -> None:
+        """COW must cover BOTH caches: target and draft share one page
+        table, so a cloned page id must carry both models' prefix KV
+        (the donor's prefill wrote both — see ``_prefill_call``)."""
+        self.kv.clone_page(src, dst)
+        self.kv_draft.clone_page(src, dst)
+
     def _prefill_call(self, toks, chunk, page_row):
         """Chunked prefill through BOTH models (the draft needs its own KV
         for the prompt); the chunk bookkeeping is inherited.  The request's

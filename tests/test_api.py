@@ -1,0 +1,279 @@
+"""API-redesign suite: the consolidated ``load_engine`` factory, the
+``RequestHandle`` contract, and the deprecation shims.
+
+Pins the PR-8 satellite guarantees:
+
+  * ``load_engine`` sniffs artifact vs bundle sources and picks the
+    paged / fixed-slot / speculative engine (with ``engine=`` overrides);
+  * the old entry points (``ServeEngine.from_artifact``,
+    ``SpeculativeEngine.from_artifacts`` / ``from_bundle``,
+    ``make_engine``) still work one release behind ``DeprecationWarning``
+    and produce engines equivalent to the factory's;
+  * ``submit()`` returns a :class:`RequestHandle` with the shared
+    lifecycle surface, and loose ``temperature=`` kwargs keep working
+    one release behind ``DeprecationWarning``;
+  * ``repro.serving.__all__`` is the supported surface and imports clean.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving import (FixedSlotEngine, RequestHandle, SamplingParams,
+                           ServeEngine, SpeculativeEngine, load_engine,
+                           make_engine)
+
+
+def _tiny_cfg(amm=False):
+    cfg = get_config("qwen3-14b", reduced=True)
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, d_ff=128,
+                              vocab_size=64, num_heads=2, num_kv_heads=1,
+                              head_dim=32)
+    if amm:
+        cfg = dataclasses.replace(
+            cfg, amm=dataclasses.replace(cfg.amm, enabled=True))
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
+    return cfg, MD.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    """One compiled amm_lm artifact dir + one target/draft bundle dir."""
+    from repro.compiler import compile_lm_amm, compile_lm_bundle
+
+    cfg = _tiny_cfg(amm=True)
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    calib = np.random.default_rng(0).integers(0, 64, (2, 8))
+    root = tmp_path_factory.mktemp("artifacts")
+    res = compile_lm_amm(params, cfg, calib, out=str(root / "lm"))
+    compile_lm_bundle(params, cfg, calib, spec_k=2, out=str(root / "bundle"))
+    return cfg, params, root, res.artifact
+
+
+# ---------------------------------------------------------------------------
+# load_engine: source sniffing + engine overrides.
+# ---------------------------------------------------------------------------
+
+
+def test_load_engine_none_source_family_dispatch(setup):
+    cfg, params = setup
+    eng = load_engine(None, params, cfg, max_batch=2, max_len=64)
+    assert isinstance(eng, ServeEngine)
+    assert not isinstance(eng, SpeculativeEngine)
+    ssm = get_config("mamba2-370m", reduced=True)
+    eng = load_engine(None, MD.init_params(ssm, jax.random.PRNGKey(0)), ssm,
+                      max_batch=4, max_len=32, page_size=4)
+    assert isinstance(eng, FixedSlotEngine)
+    assert eng.slots == 4  # max_batch maps to slots on the fixed fallback
+
+
+def test_load_engine_engine_override(setup):
+    cfg, params = setup
+    eng = load_engine(None, params, cfg, engine="fixed", max_batch=2,
+                      max_len=64, page_size=4)
+    assert isinstance(eng, FixedSlotEngine)
+    with pytest.raises(ValueError, match="engine must be one of"):
+        load_engine(None, params, cfg, engine="turbo")
+    with pytest.raises(ValueError, match="bundle"):
+        load_engine(None, params, cfg, speculative=True)
+
+
+def test_load_engine_artifact_path(artifacts):
+    cfg, params, root, _ = artifacts
+    eng = load_engine(root / "lm", params, cfg, max_batch=2, max_len=64)
+    assert isinstance(eng, ServeEngine)
+    assert eng.cfg.amm.enabled  # the artifact's LUT-MU path is spliced in
+    eng = load_engine(str(root / "lm"), params, cfg, engine="fixed",
+                      max_batch=2, max_len=64)
+    assert isinstance(eng, FixedSlotEngine)
+    with pytest.raises(ValueError, match="bundle"):
+        load_engine(root / "lm", params, cfg, speculative=True)
+
+
+def test_load_engine_bundle_path(artifacts):
+    cfg, params, root, _ = artifacts
+    eng = load_engine(root / "bundle", params, cfg, max_batch=2, max_len=64)
+    assert isinstance(eng, SpeculativeEngine)
+    assert eng.spec_k == 2  # manifest-recorded suggestion
+    # speculative=False serves the bundle's target half on the plain engine
+    eng = load_engine(root / "bundle", params, cfg, speculative=False,
+                      max_batch=2, max_len=64)
+    assert isinstance(eng, ServeEngine)
+    assert not isinstance(eng, SpeculativeEngine)
+
+
+def test_load_engine_artifact_objects(artifacts):
+    from repro.compiler.artifact import load_bundle
+
+    cfg, params, root, art = artifacts
+    eng = load_engine(art, params, cfg, max_batch=2, max_len=64)
+    assert isinstance(eng, ServeEngine) and eng.cfg.amm.enabled
+    target, draft, _ = load_bundle(root / "bundle")
+    eng = load_engine((target, draft), params, cfg, spec_k=2, max_batch=2,
+                      max_len=64)
+    assert isinstance(eng, SpeculativeEngine)
+    with pytest.raises(ValueError, match="target, draft"):
+        load_engine((target,), params, cfg)
+    with pytest.raises(TypeError, match="unsupported source"):
+        load_engine(42, params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn, and stay stream-equivalent to the factory.
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[1, 2, 3], [7, 5], [9, 9, 9, 2]]
+
+
+def _streams(eng):
+    handles = [eng.submit(p, max_new_tokens=6) for p in PROMPTS]
+    eng.run_until_drained()
+    return [h.tokens() for h in handles]
+
+
+def test_make_engine_shim_equivalent(setup):
+    cfg, params = setup
+    with pytest.warns(DeprecationWarning, match="load_engine"):
+        old = make_engine(params, cfg, max_batch=2, max_len=64)
+    new = load_engine(None, params, cfg, max_batch=2, max_len=64)
+    assert type(old) is type(new)
+    assert _streams(old) == _streams(new)
+
+
+def test_from_artifact_shim_equivalent(artifacts):
+    cfg, params, root, _ = artifacts
+    with pytest.warns(DeprecationWarning, match="load_engine"):
+        old = ServeEngine.from_artifact(root / "lm", params, cfg,
+                                        max_batch=2, max_len=64)
+    new = load_engine(root / "lm", params, cfg, max_batch=2, max_len=64)
+    assert _streams(old) == _streams(new)
+    with pytest.warns(DeprecationWarning, match="load_engine"):
+        FixedSlotEngine.from_artifact(root / "lm", params, cfg, slots=2,
+                                      max_len=64)
+
+
+def test_from_bundle_shim_equivalent(artifacts):
+    cfg, params, root, _ = artifacts
+    with pytest.warns(DeprecationWarning, match="load_engine"):
+        old = SpeculativeEngine.from_bundle(root / "bundle", params, cfg,
+                                            max_batch=2, max_len=64)
+    new = load_engine(root / "bundle", params, cfg, max_batch=2, max_len=64)
+    assert old.spec_k == new.spec_k
+    assert _streams(old) == _streams(new)
+
+
+# ---------------------------------------------------------------------------
+# RequestHandle: the shared per-request surface.
+# ---------------------------------------------------------------------------
+
+
+def test_handle_lifecycle_paged(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=64, prefill_chunk=4)
+    a = eng.submit([1, 2, 3], max_new_tokens=4)
+    b = eng.submit([7, 5], max_new_tokens=4)  # queued behind a
+    assert isinstance(a, RequestHandle)
+    assert a.status == "queued" and b.status == "queued"
+    assert a.request_id != b.request_id
+    eng.step()
+    assert a.status == "running"
+    assert a.tokens() == a.generated[:]  # snapshot, not alias
+    got = a.result()
+    assert a.status == "done" and a.done and got == a.generated
+    assert b.result() and b.status == "done"
+    assert not eng.has_work
+    # back-compat delegation: pre-handle call sites read request attrs
+    assert a.uid == a.request_id and a.prompt == [1, 2, 3]
+    assert "done" in repr(a)
+
+
+def test_handle_cancel(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=64)
+    a = eng.submit([1, 2, 3], max_new_tokens=4)
+    b = eng.submit([7, 5], max_new_tokens=4)
+    assert b.cancel() is True
+    assert b.status == "cancelled" and b.cancelled
+    assert b.cancel() is False  # already gone
+    a.result()
+    assert a.status == "done"
+
+
+def test_handle_lifecycle_fixed_slot(setup):
+    cfg, params = setup
+    ssm = get_config("mamba2-370m", reduced=True)
+    eng = FixedSlotEngine(MD.init_params(ssm, jax.random.PRNGKey(0)), ssm,
+                          slots=1, max_len=32)
+    a = eng.submit([1, 2, 3], max_new_tokens=3)
+    b = eng.submit([4, 5], max_new_tokens=3)
+    assert a.status == "queued"
+    assert b.cancel() and b.status == "cancelled"
+    assert a.result() == a.generated and a.status == "done"
+
+
+def test_handle_result_budget(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=64)
+    h = eng.submit([1, 2, 3], max_new_tokens=8)
+    with pytest.raises(RuntimeError, match="steps exhausted"):
+        h.result(max_steps=2)
+    assert h.result() == h.generated  # default budget drains fine
+
+
+def test_handle_async_stream(setup):
+    import asyncio
+
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64)
+    ref = ServeEngine(params, cfg, max_batch=2, max_len=64)
+    want = ref.submit([1, 2, 3], max_new_tokens=6).result()
+
+    async def collect():
+        h = eng.submit([1, 2, 3], max_new_tokens=6)
+        return [t async for t in h.stream()]
+
+    assert asyncio.run(collect()) == want
+
+
+# ---------------------------------------------------------------------------
+# submit(): frozen SamplingParams + legacy loose kwargs.
+# ---------------------------------------------------------------------------
+
+
+def test_submit_legacy_sampling_kwargs(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64)
+    with pytest.warns(DeprecationWarning, match="SamplingParams"):
+        old = eng.submit([1, 2, 3], max_new_tokens=6, temperature=0.9,
+                         top_k=4, seed=11)
+    new = eng.submit([1, 2, 3], max_new_tokens=6,
+                     sampling=SamplingParams(temperature=0.9, top_k=4,
+                                             seed=11))
+    eng.run_until_drained()
+    assert old.sampling == new.sampling
+    assert old.tokens() == new.tokens()
+
+
+def test_submit_rejects_bad_kwargs(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=64)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        eng.submit([1, 2, 3], temperatur=0.9)  # typo must not pass silently
+    with pytest.raises(TypeError, match="not both"):
+        eng.submit([1, 2, 3], sampling=SamplingParams(), temperature=0.9)
+
+
+def test_all_exports_resolve():
+    import repro.serving as srv
+
+    for name in srv.__all__:
+        assert getattr(srv, name, None) is not None, name
+    assert sorted(set(srv.__all__)) == sorted(srv.__all__)

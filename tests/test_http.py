@@ -1,0 +1,229 @@
+"""Async HTTP front-end suite (in-process, stdlib asyncio only).
+
+Drives :class:`repro.serving.http.AsyncServer` over a real socket on an
+ephemeral port: NDJSON token streams must bit-match the offline engine
+(shared prefixes included), a client disconnect mid-stream must cancel
+its request and free its pages, per-tenant token buckets must answer 429
+without affecting other tenants, and /healthz + /metrics must serve.
+"""
+import asyncio
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving import AsyncServer, Recorder, ServeEngine
+
+STEM = [5, 1, 4, 1, 5, 9, 2, 6, 5, 3]
+
+
+def _tiny_cfg():
+    cfg = get_config("qwen3-14b", reduced=True)
+    return dataclasses.replace(cfg, num_layers=2, d_model=64, d_ff=128,
+                               vocab_size=64, num_heads=2, num_kv_heads=1,
+                               head_dim=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
+    return cfg, MD.init_params(cfg, jax.random.PRNGKey(0))
+
+
+# -- tiny HTTP/1.1 client helpers -------------------------------------------
+
+
+async def _request(port, method, path, body=None, headers=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    payload = json.dumps(body).encode() if body is not None else b""
+    head = f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+    for k, v in (headers or {}).items():
+        head += f"{k}: {v}\r\n"
+    if payload:
+        head += f"Content-Length: {len(payload)}\r\n"
+    writer.write(head.encode() + b"\r\n" + payload)
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    hdrs = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = line.decode().partition(":")
+        hdrs[k.strip().lower()] = v.strip()
+    return reader, writer, status, hdrs
+
+
+async def _read_chunk(reader):
+    """One chunked-transfer chunk, or None on the terminating chunk."""
+    n = int((await reader.readline()).strip() or b"0", 16)
+    if n == 0:
+        return None
+    data = await reader.readexactly(n)
+    await reader.readline()  # trailing CRLF
+    return data
+
+
+async def _read_body(reader, hdrs):
+    if hdrs.get("transfer-encoding") == "chunked":
+        out = b""
+        while True:
+            c = await _read_chunk(reader)
+            if c is None:
+                return out
+            out += c
+    return await reader.readexactly(int(hdrs.get("content-length", 0)))
+
+
+async def _stream_tokens(port, prompt, max_new, tenant=None):
+    """POST /v1/generate and collect the full NDJSON stream."""
+    reader, writer, status, hdrs = await _request(
+        port, "POST", "/v1/generate",
+        body={"prompt": prompt, "max_new_tokens": max_new},
+        headers={"X-Tenant": tenant} if tenant else None)
+    assert status == 200, status
+    recs = [json.loads(ln)
+            for ln in (await _read_body(reader, hdrs)).decode().splitlines()]
+    writer.close()
+    final = recs[-1]
+    assert final.get("done") is True
+    tokens = [r["token"] for r in recs[:-1]]
+    assert tokens == final["tokens"]  # per-token stream == final snapshot
+    return final["tokens"]
+
+
+# -- tests -------------------------------------------------------------------
+
+
+def test_http_streams_bitmatch_offline_shared_prefix(setup):
+    """Two shared-prefix streams over HTTP (the second admitted after the
+    first finishes, so it maps cached pages) bit-match the offline
+    cold-start engine — the tentpole acceptance path end to end."""
+    cfg, params = setup
+    prompts = [STEM + [7, 7, 7], STEM + [7, 7, 7], STEM + [8, 8]]
+
+    cold = ServeEngine(params, cfg, max_batch=2, max_len=64, page_size=4,
+                       prefill_chunk=4, prefix_cache=False)
+    want = [cold.submit(p, max_new_tokens=6) for p in prompts]
+    cold.run_until_drained()
+    want = [h.tokens() for h in want]
+
+    rec = Recorder(trace=False)
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64, page_size=4,
+                      prefill_chunk=4, recorder=rec)
+    server = AsyncServer(eng, port=0)
+
+    async def main():
+        await server.start()
+        try:
+            first = await _stream_tokens(server.port, prompts[0], 6)
+            rest = await asyncio.gather(
+                _stream_tokens(server.port, prompts[1], 6),
+                _stream_tokens(server.port, prompts[2], 6))
+            return [first] + list(rest)
+        finally:
+            await server.stop()
+
+    got = asyncio.run(main())
+    assert got == want, (got, want)
+    v = rec.registry.value
+    assert v("serve_prefix_lookups_total", result="hit") > 0
+    assert v("serve_prefix_reused_tokens_total") > 0
+    eng.sched.check_invariants()
+
+
+def test_http_disconnect_cancels_request(setup):
+    """Closing the socket mid-stream cancels the request server-side —
+    its row and pages free, and the engine drains to idle."""
+    cfg, params = setup
+    rec = Recorder(trace=False)
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64, page_size=4,
+                      prefill_chunk=4, recorder=rec)
+    server = AsyncServer(eng, port=0)
+
+    async def main():
+        await server.start()
+        try:
+            reader, writer, status, hdrs = await _request(
+                server.port, "POST", "/v1/generate",
+                body={"prompt": STEM, "max_new_tokens": 48})
+            assert status == 200
+            assert await _read_chunk(reader) is not None  # one token landed
+            writer.close()  # walk away mid-stream
+            for _ in range(500):
+                if not eng.has_work:
+                    break
+                await asyncio.sleep(0.02)
+        finally:
+            await server.stop()
+
+    asyncio.run(main())
+    assert not eng.has_work
+    assert rec.registry.value("serve_requests_cancelled_total") == 1
+    eng.sched.check_invariants()
+
+
+def test_http_per_tenant_rate_limit(setup):
+    """A tenant over its bucket gets 429 + Retry-After; other tenants
+    keep their own budget."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64)
+    server = AsyncServer(eng, port=0, rate_limit=0.001, rate_burst=1)
+
+    async def main():
+        await server.start()
+        try:
+            a1 = await _stream_tokens(server.port, [1, 2, 3], 2, tenant="a")
+            assert len(a1) == 2
+            _, w, status, hdrs = await _request(
+                server.port, "POST", "/v1/generate",
+                body={"prompt": [1, 2, 3], "max_new_tokens": 2},
+                headers={"X-Tenant": "a"})
+            assert status == 429 and "retry-after" in hdrs
+            w.close()
+            b1 = await _stream_tokens(server.port, [1, 2, 3], 2, tenant="b")
+            assert b1 == a1  # fresh bucket, same deterministic stream
+        finally:
+            await server.stop()
+
+    asyncio.run(main())
+
+
+def test_http_health_metrics_and_errors(setup):
+    cfg, params = setup
+    rec = Recorder(trace=False)
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64, recorder=rec)
+    server = AsyncServer(eng, port=0)
+
+    async def main():
+        await server.start()
+        try:
+            r, w, status, hdrs = await _request(server.port, "GET",
+                                                "/healthz")
+            assert status == 200
+            assert (await _read_body(r, hdrs)) == b"ok\n"
+            w.close()
+
+            await _stream_tokens(server.port, [1, 2, 3], 2)
+            r, w, status, hdrs = await _request(server.port, "GET",
+                                                "/metrics")
+            assert status == 200
+            text = (await _read_body(r, hdrs)).decode()
+            assert "serve_requests_submitted_total 1" in text
+            w.close()
+
+            _, w, status, _ = await _request(server.port, "GET", "/nope")
+            assert status == 404
+            w.close()
+            _, w, status, _ = await _request(server.port, "POST",
+                                             "/v1/generate",
+                                             body={"max_new_tokens": 2})
+            assert status == 400  # prompt is required
+            w.close()
+        finally:
+            await server.stop()
+
+    asyncio.run(main())

@@ -52,6 +52,79 @@ def test_allocator_all_or_nothing():
 
 
 # ---------------------------------------------------------------------------
+# Refcounted sharing (prefix reuse / COW).
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_share_free_conservation():
+    """Refcounts are conserved: N shares need N+1 frees, the page only
+    returns to the pool on the last one."""
+    alloc = PageAllocator(4)
+    [p] = alloc.alloc(1)
+    alloc.share([p])
+    alloc.share([p])
+    assert alloc.refcount(p) == 3 and alloc.is_shared(p)
+    alloc.free([p])
+    alloc.free([p])
+    assert alloc.available == 3          # still held once
+    assert alloc.refcount(p) == 1 and not alloc.is_shared(p)
+    alloc.free([p])
+    assert alloc.available == 4
+    with pytest.raises(PageError, match="double free"):
+        alloc.free([p])
+
+
+def test_allocator_share_validates():
+    alloc = PageAllocator(4)
+    with pytest.raises(PageError, match="not part"):
+        alloc.share([9])
+    with pytest.raises(PageError):
+        alloc.share([0])  # free page: nothing to share
+
+
+def test_allocator_no_double_free_through_sharing():
+    """A shared page over-freed past its refcount raises instead of
+    corrupting the free list (the classic double-free-via-alias bug)."""
+    alloc = PageAllocator(2)
+    [p] = alloc.alloc(1)
+    alloc.share([p])
+    alloc.free([p])
+    alloc.free([p])
+    with pytest.raises(PageError, match="double free"):
+        alloc.free([p])
+    # and the pool is intact: both pages allocate exactly once
+    assert sorted(alloc.alloc(2)) == [0, 1]
+
+
+def test_cow_clone_never_aliases_writer():
+    """The scheduler's COW plan always clones into a page the writer
+    exclusively owns — the shared source page is never in a writable
+    slice of any request's table."""
+    sched = _mk_sched(num_pages=12, max_batch=2)
+    rng = np.random.default_rng(3)
+    stem = [7, 7, 7, 7, 1, 2]  # 1.5 pages: full page + partial
+    a = Request(uid=0, prompt=stem + [3], max_new_tokens=2)
+    sched.submit(a)
+    while a.state != DONE:
+        _fake_execute(sched, sched.schedule(), rng)
+        sched.check_invariants()
+    b = Request(uid=1, prompt=stem + [9, 9], max_new_tokens=2)
+    sched.submit(b)
+    plan = sched.schedule()
+    assert len(plan.cow) == 1
+    clone = plan.cow[0]
+    # src is the indexed partial page (shared); dst is b's own page
+    assert clone.src in sched.prefix.pages_held()
+    assert clone.dst in b.pages and clone.src != clone.dst
+    assert sched.alloc.is_shared(clone.src)
+    # b's writable slice excludes the read-only full prefix pages
+    assert clone.src not in b.pages[b.shared_prefix:]
+    assert clone.dst in b.pages[b.shared_prefix:]
+    _fake_execute(sched, plan, rng)
+    sched.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # Pure-host scheduler fuzz (mocked model).
 # ---------------------------------------------------------------------------
 
@@ -69,6 +142,11 @@ def _mk_sched(num_pages, max_batch=3, prefill_chunk=4):
 def _fake_execute(sched, plan, rng):
     """Stand in for the engine: advance prefill, 'decode' one token per
     scheduled row, retire on budget — no tensors anywhere."""
+    for clone in plan.cow:
+        if clone.req.cow is None:
+            continue  # owner evicted in the same plan; clone abandoned
+        # no tensors to copy here — just complete the COW protocol
+        sched.cow_executed(clone)
     for req, old_pages in plan.swap_out:
         req.host_kv = types.SimpleNamespace(num_pages=len(old_pages))
     for req in plan.swap_in:
@@ -90,6 +168,19 @@ def _fake_execute(sched, plan, rng):
             sched.retire(req)
 
 
+# shared stems make the fuzz hit the radix index: admissions map cached
+# full pages, plan COW clones on partial matches, and race index eviction
+FUZZ_STEMS = ([7, 7, 7, 7, 1, 2, 3, 4], [9, 9, 9, 9, 9, 9])
+
+
+def _fuzz_prompt(rng):
+    if rng.random() < 0.5:
+        stem = FUZZ_STEMS[int(rng.integers(0, len(FUZZ_STEMS)))]
+        head = list(stem[:int(rng.integers(2, len(stem) + 1))])
+        return head + list(rng.integers(0, 64, int(rng.integers(0, 5))))
+    return list(rng.integers(0, 64, int(rng.integers(1, 12))))
+
+
 @pytest.mark.parametrize("seed", range(8))
 def test_scheduler_fuzz_invariants(seed):
     rng = np.random.default_rng(seed)
@@ -98,10 +189,9 @@ def test_scheduler_fuzz_invariants(seed):
     submitted, uid = [], 0
     for step in range(300):
         if rng.random() < 0.35 and len(submitted) < 40:
-            req = Request(uid=uid, prompt=list(rng.integers(0, 64, int(
-                rng.integers(1, 12)))),
-                max_new_tokens=int(rng.integers(1, 9)),
-                priority=int(rng.integers(0, 3)))
+            req = Request(uid=uid, prompt=_fuzz_prompt(rng),
+                          max_new_tokens=int(rng.integers(1, 9)),
+                          priority=int(rng.integers(0, 3)))
             uid += 1
             try:
                 sched.submit(req)
@@ -120,6 +210,9 @@ def test_scheduler_fuzz_invariants(seed):
         _fake_execute(sched, sched.schedule(), rng)
         sched.check_invariants()
     assert not sched.live(), f"starved requests: {sched.live()}"
+    # after drain only the prefix index holds pages; dropping it must
+    # account for every page (anything else is a leak)
+    sched.prefix.clear()
     assert sched.alloc.available == num_pages, "pages leaked after drain"
     for req in submitted:
         assert req.state == DONE and req.done
@@ -216,13 +309,13 @@ def test_engine_fuzz_bitmatches_sequential():
 
     rng = np.random.default_rng(42)
     # 9 pages of 4 for 3 rows × up to 32 tokens → guaranteed page pressure
+    # (prefix reuse + COW race index eviction and host swap here)
     eng = ServeEngine(params, cfg, max_batch=3, max_len=32, page_size=4,
                       prefill_chunk=4, num_pages=9)
     reqs, cancelled = [], []
     for step in range(250):
         if rng.random() < 0.3 and len(reqs) < 12:
-            prompt = [int(t) for t in rng.integers(1, 64, int(
-                rng.integers(1, 10)))]
+            prompt = [max(1, t) for t in _fuzz_prompt(rng)] or [1]
             reqs.append(eng.submit(prompt, max_new_tokens=int(
                 rng.integers(1, 7)), priority=int(rng.integers(0, 2))))
         if rng.random() < 0.05 and reqs:
@@ -235,6 +328,7 @@ def test_engine_fuzz_bitmatches_sequential():
             break
     eng.run_until_drained()
     assert len(reqs) >= 12 and not eng.has_work
+    eng.sched.prefix.clear()  # only the index may still hold pages
     assert eng.kv.allocator.in_use == 0
     checked = 0
     for r in reqs:
@@ -318,6 +412,7 @@ def test_engine_fuzz_sampled_streams_survive_eviction():
             break
     eng.run_until_drained()
     assert len(reqs) >= 10 and not eng.has_work
+    eng.sched.prefix.clear()  # only the index may still hold pages
     assert eng.kv.allocator.in_use == 0
     checked = sampled = 0
     for r in reqs:

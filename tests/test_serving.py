@@ -132,8 +132,13 @@ def test_paged_bitmatches_under_eviction(setup):
                                        prefill_chunk=4, num_pages=9))
     for f, p in zip(rf, rp):
         assert f.generated == p.generated, (f.prompt, f.generated, p.generated)
-    assert paged.kv.allocator.in_use == 0  # every page returned
+    # retired prompts stay referenced by the prefix index (that's the
+    # point); clearing it must return every page to the pool
+    held = set(paged.sched.prefix.pages_held())
+    assert paged.kv.allocator.in_use == len(held)
     paged.sched.check_invariants()
+    paged.sched.prefix.clear()
+    assert paged.kv.allocator.in_use == 0  # every page returned
 
 
 def test_cancellation(setup):
@@ -149,6 +154,9 @@ def test_cancellation(setup):
     assert a.cancelled and c.cancelled and not b.cancelled
     assert b.generated == _reference_generate(params, cfg, [7, 5], 6)
     assert not eng.cancel(b.uid)      # finished → not cancellable
+    # prefilled prompts stay referenced by the prefix index; clearing it
+    # must account for every page still out of the pool
+    eng.sched.prefix.clear()
     assert eng.kv.allocator.in_use == 0
 
 
@@ -190,6 +198,122 @@ def test_make_engine_family_fallback(setup):
                       page_size=4, prefill_chunk=4)
     assert isinstance(eng, FixedSlotEngine)
     assert eng.slots == 8  # max_batch maps to slots, not dropped
+
+
+# ---------------------------------------------------------------------------
+# Differential: prefix-sharing reuse vs cold start (the PR-8 tentpole).
+# ---------------------------------------------------------------------------
+
+# a 10-token common stem, then: identical, diverge mid-page, diverge on a
+# page boundary, short prompt inside the stem, unrelated
+STEM = [5, 1, 4, 1, 5, 9, 2, 6, 5, 3]
+SHARED_PROMPTS = [STEM + [7, 7, 7],
+                  STEM + [7, 7, 7],          # exact repeat
+                  STEM + [8, 8],             # diverges after the stem
+                  STEM[:6] + [9, 9, 9, 9],   # diverges mid-stem
+                  STEM[:4],                  # prompt inside the stem
+                  [2, 7, 1, 8, 2, 8]]        # no shared prefix
+
+
+def _drain_prefix_pair(params, cfg, **paged_kwargs):
+    from repro.serving import Recorder
+
+    rec = Recorder()
+    warm = ServeEngine(params, cfg, max_len=64, prefix_cache=True,
+                       recorder=rec, **paged_kwargs)
+    rw = [warm.submit(p, max_new_tokens=8) for p in SHARED_PROMPTS]
+    warm.run_until_drained()
+    cold = ServeEngine(params, cfg, max_len=64, prefix_cache=False,
+                       **paged_kwargs)
+    rc = [cold.submit(p, max_new_tokens=8) for p in SHARED_PROMPTS]
+    cold.run_until_drained()
+    return rw, rc, warm, rec
+
+
+def test_shared_prefix_bitmatches_cold_start(setup):
+    """The tentpole acceptance criterion: admissions that map cached
+    prefix pages (read-only full pages + one COW-cloned partial page)
+    produce streams bit-identical to prefilling from scratch."""
+    cfg, params = setup
+    rw, rc, warm, rec = _drain_prefix_pair(params, cfg, max_batch=2,
+                                           page_size=4, prefill_chunk=4)
+    for w, c in zip(rw, rc):
+        assert w.generated == c.generated, (w.prompt, w.generated,
+                                            c.generated)
+    v = rec.registry.value
+    assert v("serve_prefix_lookups_total", result="hit") > 0
+    assert v("serve_prefix_reused_tokens_total") > 0
+    assert v("serve_cow_clones_total") > 0  # mid-page divergence clones
+    warm.sched.check_invariants()
+
+
+def test_shared_prefix_bitmatches_under_eviction(setup):
+    """Prefix reuse under page pressure: the pool is too small for the
+    workload, so admissions race index eviction and host swap — streams
+    must still bit-match a cold engine with the same (tight) pool."""
+    cfg, params = setup
+    rw, rc, warm, _ = _drain_prefix_pair(params, cfg, max_batch=2,
+                                         page_size=4, prefill_chunk=4,
+                                         num_pages=10)
+    for w, c in zip(rw, rc):
+        assert w.generated == c.generated, (w.prompt, w.generated,
+                                            c.generated)
+    warm.sched.check_invariants()
+
+
+def test_shared_prefix_with_cancellation(setup):
+    """Cancelling a sharer must not corrupt the cached prefix other
+    requests keep reading: survivors still bit-match cold streams."""
+    cfg, params = setup
+    cold = ServeEngine(params, cfg, max_batch=2, max_len=64, page_size=4,
+                       prefill_chunk=4, prefix_cache=False)
+    ref = cold.submit(SHARED_PROMPTS[0], max_new_tokens=8)
+    cold.run_until_drained()
+
+    warm = ServeEngine(params, cfg, max_batch=2, max_len=64, page_size=4,
+                       prefill_chunk=4, prefix_cache=True)
+    warm.submit(SHARED_PROMPTS[0], max_new_tokens=8)
+    warm.run_until_drained()
+    # two sharers admitted together; kill one mid-flight
+    a = warm.submit(SHARED_PROMPTS[0], max_new_tokens=8)
+    b = warm.submit(SHARED_PROMPTS[1], max_new_tokens=8)
+    warm.step()
+    assert warm.cancel(a.uid)
+    warm.run_until_drained()
+    assert b.generated == ref.generated
+    warm.sched.check_invariants()
+
+
+def test_prefix_index_match_semantics(setup):
+    """Unit-level: coverage is capped at len(prompt)-1, partial matches
+    report the page to clone, and inserts only ref newly created nodes."""
+    from repro.serving import PageAllocator, RadixPrefixIndex
+
+    alloc = PageAllocator(16)
+    idx = RadixPrefixIndex(alloc, page_size=4)
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]
+    pages = alloc.alloc(3)
+    idx.insert(prompt, pages)
+    assert len(idx) == 3
+
+    # exact repeat: 9 of 10 tokens covered (cap), 2 full pages + partial
+    full, partial, covered = idx.match(list(prompt))
+    assert covered == 9 and full == pages[:2]
+    assert partial == (pages[2], 1)
+    # divergence after one full page: page 0 read-only, page 1 cloned
+    full, partial, covered = idx.match([1, 2, 3, 4, 5, 6, 99, 99])
+    assert covered == 6 and full == [pages[0]]
+    assert partial == (pages[1], 2)
+    # prompt strictly inside the first page: clone with rem = len-1
+    full, partial, covered = idx.match([1, 2, 3])
+    assert covered == 2 and full == []
+    assert partial == (pages[0], 2)
+    # no match
+    assert idx.match([9, 8, 7]) == ([], None, 0)
+    # re-inserting the same prompt adds no nodes and no refs
+    before = [alloc.refcount(p) for p in pages]
+    assert idx.insert(prompt, pages) == 0
+    assert [alloc.refcount(p) for p in pages] == before
 
 
 def test_page_pool_pads_to_dp_degree(setup):

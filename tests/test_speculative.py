@@ -62,6 +62,7 @@ def _drain_spec(params, cfg, draft_params, oracle, *, spec_k,
         assert r.generated == oracle[tuple(r.prompt)], (
             spec_k, r.prompt, r.generated, oracle[tuple(r.prompt)])
     spec.sched.check_invariants()
+    spec.sched.prefix.clear()  # only the prefix index may hold pages now
     assert spec.kv.allocator.in_use == 0
     return spec
 
@@ -99,6 +100,7 @@ def test_identical_draft_accepts_all_under_sampling(setup):
     assert spec.stats["proposed"] > 0
     assert spec.acceptance_rate == 1.0
     spec.sched.check_invariants()
+    spec.sched.prefix.clear()
     assert spec.kv.allocator.in_use == 0
 
 
@@ -131,6 +133,7 @@ def test_mixed_batch_t0_rows_stay_greedy(setup):
                 i, r.prompt, r.generated, oracle[tuple(r.prompt)])
     assert mixed_rounds > 0
     spec.sched.check_invariants()
+    spec.sched.prefix.clear()
     assert spec.kv.allocator.in_use == 0
 
 
@@ -155,6 +158,58 @@ def test_bitmatches_under_eviction(setup):
     assert spec.acceptance_rate == 1.0  # swap restores the draft cache too
 
 
+def test_shared_prefix_bitmatches_cold_start(setup):
+    """PR-8 tentpole on the speculative engine: admissions reusing cached
+    prefix pages — including the COW clone that must cover BOTH the
+    target and draft caches (one page table) — bit-match cold starts,
+    with verify-window garbage writes and rollback in the mix."""
+    cfg, params, _ = setup
+    stem = [5, 1, 4, 1, 5, 9, 2, 6, 5, 3]
+    prompts = [stem + [7, 7, 7], stem + [7, 7, 7], stem + [8, 8],
+               stem[:6] + [9, 9, 9, 9], [2, 7, 1, 8, 2, 8]]
+
+    def drain(prefix_cache):
+        spec = SpeculativeEngine(params, cfg, params, spec_k=3, max_batch=2,
+                                 max_len=64, page_size=4, prefill_chunk=4,
+                                 prefix_cache=prefix_cache)
+        reqs = [spec.submit(p, max_new_tokens=8) for p in prompts]
+        spec.run_until_drained()
+        return reqs, spec
+
+    rw, warm = drain(True)
+    rc, _ = drain(False)
+    for w, c in zip(rw, rc):
+        assert w.generated == c.generated, (w.prompt, w.generated,
+                                            c.generated)
+    assert warm.acceptance_rate == 1.0  # identical draft stays complete
+    warm.sched.check_invariants()
+    warm.sched.prefix.clear()
+    assert warm.kv.allocator.in_use == 0
+    assert not warm._draft_host
+
+
+def test_shared_prefix_bitmatches_under_eviction(setup):
+    """Prefix reuse + undersized pool on the speculative engine: index
+    eviction, host swap of both caches and rollback all interleave —
+    streams must still bit-match the cold engine under the same pool."""
+    cfg, params, _ = setup
+    stem = [5, 1, 4, 1, 5, 9, 2, 6]
+    prompts = [stem + [7, 7], stem + [7, 7], stem + [8], stem[:5] + [9, 9]]
+
+    def drain(prefix_cache):
+        spec = SpeculativeEngine(params, cfg, params, spec_k=2, max_batch=2,
+                                 max_len=32, page_size=4, prefill_chunk=4,
+                                 num_pages=10, prefix_cache=prefix_cache)
+        reqs = [spec.submit(p, max_new_tokens=6) for p in prompts]
+        spec.run_until_drained()
+        spec.sched.check_invariants()
+        return reqs
+
+    for w, c in zip(drain(True), drain(False)):
+        assert w.generated == c.generated, (w.prompt, w.generated,
+                                            c.generated)
+
+
 def test_cancellation(setup):
     cfg, params, oracle = setup
     spec = SpeculativeEngine(params, cfg, params, spec_k=3, max_batch=1,
@@ -169,6 +224,7 @@ def test_cancellation(setup):
     assert a.cancelled and c.cancelled and not b.cancelled
     assert b.generated == oracle[(7, 5)]
     assert not spec.cancel(b.uid)
+    spec.sched.prefix.clear()
     assert spec.kv.allocator.in_use == 0
     assert not spec._draft_host       # no leaked swap copies
 
@@ -288,9 +344,10 @@ def test_golden_streams_through_bundle(tmp_path):
         np.testing.assert_array_equal(bundle.target.tensors[k_],
                                       amm.artifact.tensors[k_])
 
-    eng = SpeculativeEngine.from_bundle(tmp_path / "bundle", params, cfg,
-                                        max_batch=2, max_len=64,
-                                        page_size=16, prefill_chunk=4)
+    from repro.serving import load_engine
+    eng = load_engine(tmp_path / "bundle", params, cfg, max_batch=2,
+                      max_len=64, page_size=16, prefill_chunk=4)
+    assert isinstance(eng, SpeculativeEngine)  # kind sniffed from manifest
     assert eng.spec_k == 3  # manifest-recorded suggestion
     reqs = [eng.submit(p, max_new_tokens=MAX_NEW) for p in GOLDEN_PROMPTS]
     eng.run_until_drained()
