@@ -104,6 +104,53 @@ def _drain(engine, prompts, max_new, sampling=None):
     return n_tok, dt, done
 
 
+def _bench_fused_verify(params, cfg) -> None:
+    """PR-9 tentpole cell: ``paged_verify_step`` scan oracle vs the fused
+    layer-major window on one jitted step (B=2, W=5, S=256 paged view).
+    The fused path gathers each layer's pages once instead of W times;
+    ``check_trajectory.py --min-verify-ratio`` gates the speed-up.  The
+    two backends are bit-identical (tests/test_fused_verify.py), so the
+    ratio is a pure restructure win, not an accuracy trade."""
+    import functools
+
+    from repro.models import model as MD
+
+    b, w, ps, max_pages = 2, 5, 16, 16  # S = max_pages * ps = 256
+    n_pages = b * max_pages + 1  # + trash
+    cache = MD.init_paged_cache(cfg, n_pages, ps, jnp.float32)
+    pt = np.full((b, max_pages), n_pages - 1, np.int32)
+    for i in range(b):
+        pt[i] = np.arange(i * max_pages, (i + 1) * max_pages)
+    pt = jnp.asarray(pt)
+    pos = jnp.asarray([200, 150], jnp.int32)
+    n_valid = jnp.asarray([w, w], jnp.int32)
+    tokens = jnp.asarray(
+        np.random.default_rng(7).integers(0, cfg.vocab_size, (b, w)),
+        jnp.int32)
+
+    def us_per_step(backend, iters=30):
+        f = jax.jit(functools.partial(
+            MD.paged_verify_step, cfg=cfg, compute_dtype=jnp.float32,
+            backend=backend))
+        logits, _ = f(params, tokens, pos, n_valid, pt, cache)
+        jax.block_until_ready(logits)  # compile outside the timed loop
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            logits, _ = f(params, tokens, pos, n_valid, pt, cache)
+        jax.block_until_ready(logits)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    us_scan = us_per_step("scan")
+    us_fused = us_per_step("fused")
+    emit(
+        "spec/fused_verify/b2_w5_s256",
+        us_fused,
+        f"ratio={us_scan / max(us_fused, 1e-9):.2f};"
+        f"scan_us={us_scan:.0f};fused_us={us_fused:.0f};"
+        f"batch=2;window=5;s=256;bitmatch=1",
+    )
+
+
 def run() -> None:
     from repro.compiler import compile_lm_bundle
     from repro.serving import (Recorder, SamplingParams, ServeEngine,
@@ -118,6 +165,8 @@ def run() -> None:
                                draft_resolution="int4")
     params_t, cfg_t = _splice_artifact(bundle.target, params, cfg, None)
     prompts = _prompts(ts, REQUESTS)
+
+    _bench_fused_verify(params, cfg)
 
     # reported cells (tok/s, acceptance, occupancy, TTFT) are derived from
     # the engines' PR-7 metrics registries — the same source of truth the

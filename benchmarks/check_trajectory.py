@@ -33,7 +33,13 @@ Checks, in order:
      default 1.0) with non-zero prefix-hit and reused-token counters
      from the metrics registry (PR 8: the radix-index admission path
      cannot silently fall out of the measured surface).  Presence is
-     enforced by coverage against ``BENCH_PR8.json``.
+     enforced by coverage against ``BENCH_PR8.json``;
+  8. **the fused-verify claim** — whenever speculative records exist, a
+     ``spec/fused_verify/...`` cell must exist and show the fused
+     layer-major verify window at or above ``--min-verify-ratio`` ×
+     the scan oracle's speed (default 1.1: gathering each layer's pages
+     once instead of W times must actually pay — PR 9).  Presence is
+     enforced by coverage against ``BENCH_PR9.json``.
 
 Absolute µs numbers are *not* compared — CI machines vary too much; the
 trajectory tracks structure and engine-vs-engine ordering, which are
@@ -63,7 +69,8 @@ def _parse_derived(derived: str) -> dict:
 
 
 def check(baseline: dict, new: dict, min_ratio: float,
-          min_spec_ratio: float = 1.0, min_prefix_ratio: float = 1.0) -> list:
+          min_spec_ratio: float = 1.0, min_prefix_ratio: float = 1.0,
+          min_verify_ratio: float = 1.1) -> list:
     errors = []
     if not new.get("ok", False):
         errors.append(f"new run not ok: failed={new.get('failed')} "
@@ -127,6 +134,20 @@ def check(baseline: dict, new: dict, min_ratio: float,
                 errors.append(
                     f"{rec['name']}: {key} {v!r} is not positive — the "
                     f"prefix-reuse path went unmeasured")
+    verify_recs = [r for r in new.get("records", [])
+                   if "/fused_verify/" in r["name"]]
+    if spec_plain and not verify_recs:
+        errors.append(
+            "speculative records present but no fused_verify cell — the "
+            "fused verify-window kernel is unmeasured")
+    for rec in verify_recs:
+        ratio = _parse_derived(rec["derived"]).get("ratio")
+        if ratio is None:
+            errors.append(f"{rec['name']}: no ratio in derived")
+        elif ratio < min_verify_ratio:
+            errors.append(
+                f"{rec['name']}: fused verify window at {ratio:.2f}x the "
+                f"scan oracle (< required {min_verify_ratio:.2f}x)")
     engine_recs = [r for r in new.get("records", [])
                    if r["name"].startswith("serve/")
                    and ("/paged/" in r["name"] or "/fixed/" in r["name"])]
@@ -152,12 +173,15 @@ def main(argv=None) -> int:
     ap.add_argument("--min-prefix-ratio", type=float, default=1.0,
                     help="required cold/warm TTFT ratio for shared-prefix "
                          "admissions (prefix reuse must not slow TTFT)")
+    ap.add_argument("--min-verify-ratio", type=float, default=1.1,
+                    help="required fused/scan verify-window speed ratio "
+                         "(the fused kernel must beat the per-token oracle)")
     args = ap.parse_args(argv)
 
     baseline = json.loads(Path(args.baseline).read_text())
     new = json.loads(Path(args.new).read_text())
     errors = check(baseline, new, args.min_ratio, args.min_spec_ratio,
-                   args.min_prefix_ratio)
+                   args.min_prefix_ratio, args.min_verify_ratio)
     if errors:
         for e in errors:
             print(f"[trajectory] FAIL: {e}", file=sys.stderr)

@@ -29,6 +29,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -169,25 +170,59 @@ class AutotuneCache:
         self.load()
 
     def load(self) -> None:
+        self._entries = {}
         try:
-            self._entries = json.loads(self.path.read_text())
-            if not isinstance(self._entries, dict):
-                self._entries = {}
-        except (OSError, ValueError):
-            self._entries = {}
+            text = self.path.read_text()
+        except OSError:
+            return  # no cache yet — normal first run
+        except UnicodeDecodeError:
+            text = ""  # binary garbage: corrupt, same degradation below
+        entries = self._parse(text)
+        if entries is None:
+            # A process killed mid-write (pre-merge-on-save versions wrote
+            # in place) leaves truncated JSON behind.  Degrade to an empty
+            # cache — tuning re-measures, nothing else should break.
+            warnings.warn(
+                f"autotune cache {self.path} is corrupt; starting empty "
+                "(it will be rewritten on the next save)",
+                RuntimeWarning, stacklevel=2)
+            return
+        self._entries = entries
+
+    @staticmethod
+    def _parse(text: str) -> Optional[Dict[str, dict]]:
+        try:
+            entries = json.loads(text)
+        except ValueError:
+            return None
+        return entries if isinstance(entries, dict) else None
 
     def save(self) -> None:
+        """Merge-on-save: concurrent writers (bench + serve tuning different
+        shapes against one cache file) union their entries instead of the
+        last save clobbering the first.  The re-read + in-memory union is
+        racy in principle, but the rename is atomic and each entry is
+        self-contained, so the worst interleaving loses a *re-measurable
+        timing*, never corrupts the file.  The tmp name carries the pid —
+        a fixed ``.tmp`` would itself be a cross-process collision.
+        """
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = self.path.with_suffix(".tmp")
+        try:
+            on_disk = self._parse(self.path.read_text())
+        except (OSError, UnicodeDecodeError):
+            on_disk = None  # missing or corrupt: nothing worth merging
+        if on_disk:
+            self._entries = on_disk | self._entries
+        tmp = self.path.with_name(f"{self.path.name}.tmp.{os.getpid()}")
         tmp.write_text(json.dumps(self._entries, indent=1, sort_keys=True))
         os.replace(tmp, self.path)
 
-    def get(self, key: str) -> Optional[TileConfig]:
+    def get(self, key: str, cls=TileConfig):
         e = self._entries.get(key)
         if not e:
             return None
         try:
-            return TileConfig.from_dict(e)
+            return cls.from_dict(e)
         except (KeyError, TypeError, ValueError):
             return None
 
@@ -318,3 +353,186 @@ def get_tiles(
             pass  # read-only filesystem: keep the in-memory entry
         return best
     return heuristic_tiles(b, c, n, depth, jnp.dtype(lut_dtype).itemsize)
+
+
+# ---------------------------------------------------------------------------
+# The ``verify`` namespace: fused speculative-verify window tiles.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyTileConfig:
+    """Fused-verify kernel tiling: KV positions staged in VMEM per block.
+
+    ``block_s`` must be a ``page_size`` multiple that divides the logical
+    view length ``max_pages * page_size`` (the kernel DMAs whole pages and
+    its block loop is static).
+    """
+
+    block_s: int = 256
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "VerifyTileConfig":
+        return cls(int(d["block_s"]))
+
+
+def verify_shape_key(platform: str, s: int, w: int, nkv: int, g: int,
+                     hd: int, kv_dtype) -> str:
+    """Cache key for the ``verify`` backend namespace (batch-independent:
+    the grid is one step per row, so the per-step footprint is too)."""
+    return (f"{platform}|verify|s{s}|w{w}|kv{nkv}|g{g}|h{hd}|"
+            f"{jnp.dtype(kv_dtype).name}")
+
+
+def verify_vmem_bytes(tiles: VerifyTileConfig, s: int, w: int, nkv: int,
+                      g: int, hd: int, kv_itemsize: int) -> int:
+    """Per-grid-step VMEM footprint of the fused verify kernel.
+
+    K/V staging is bounded by ``block_s``; the window logits are kept whole
+    (``W · n_kv · g · S`` f32) because the masked softmax must reduce over
+    the full row in the oracle's flat order — that term is the budget
+    ceiling for long contexts, and shapes over budget fall back to the
+    portable XLA lowering.
+    """
+    staging = 2 * tiles.block_s * nkv * hd * kv_itemsize
+    logits = w * nkv * g * s * 4
+    qio = 2 * w * nkv * g * hd * 4  # q block (f32) + out block (f32)
+    return staging + logits + qio
+
+
+def verify_candidate_tiles(
+    s: int,
+    w: int,
+    nkv: int,
+    g: int,
+    hd: int,
+    kv_itemsize: int,
+    page_size: int,
+    budget_bytes: Optional[int] = None,
+) -> List[VerifyTileConfig]:
+    """In-budget stagings, largest (fewest DMA round-trips) first.  Empty
+    when even ``block_s = page_size`` cannot fit — callers then use the
+    portable lowering."""
+    budget = int((budget_bytes or VMEM_BUDGET_BYTES) * VMEM_FRACTION)
+    out = []
+    blk = page_size
+    while blk <= s:
+        if s % blk == 0:
+            t = VerifyTileConfig(blk)
+            if verify_vmem_bytes(t, s, w, nkv, g, hd, kv_itemsize) <= budget:
+                out.append(t)
+        blk *= 2
+    out.reverse()
+    return out
+
+
+def verify_heuristic_tiles(
+    s: int,
+    w: int,
+    nkv: int,
+    g: int,
+    hd: int,
+    kv_itemsize: int,
+    page_size: int,
+    budget_bytes: Optional[int] = None,
+) -> Optional[VerifyTileConfig]:
+    """Largest in-budget staging, or ``None`` (→ portable lowering)."""
+    cands = verify_candidate_tiles(
+        s, w, nkv, g, hd, kv_itemsize, page_size, budget_bytes)
+    return cands[0] if cands else None
+
+
+def measure_verify_tiles(
+    s: int,
+    w: int,
+    nkv: int,
+    g: int,
+    hd: int,
+    kv_dtype=jnp.float32,
+    *,
+    page_size: int = 16,
+    interpret: bool = True,
+    candidates: Optional[Sequence[VerifyTileConfig]] = None,
+    iters: int = 3,
+) -> Tuple[VerifyTileConfig, Dict[VerifyTileConfig, float]]:
+    """Time candidate stagings on synthetic pages of the real shape."""
+    from repro.kernels.fused_verify import verify_window_attend_pallas
+
+    kv_itemsize = jnp.dtype(kv_dtype).itemsize
+    if candidates is None:
+        candidates = verify_candidate_tiles(
+            s, w, nkv, g, hd, kv_itemsize, page_size)
+    if not candidates:
+        raise ValueError("no in-budget verify tilings to measure")
+    max_pages = s // page_size
+    n_pages = max_pages + 1  # + trash
+    rng = np.random.default_rng(0)
+    if jnp.dtype(kv_dtype) == jnp.int8:
+        kp = jnp.asarray(
+            rng.integers(-127, 128, (n_pages, page_size, nkv, hd)), jnp.int8)
+    else:
+        kp = jnp.asarray(
+            rng.normal(size=(n_pages, page_size, nkv, hd)), kv_dtype)
+    vp = kp
+    pt = jnp.asarray(
+        rng.integers(0, n_pages, (2, max_pages)), jnp.int32)
+    pos = jnp.asarray([s - w - 1, s // 2], jnp.int32)
+    win = jnp.asarray(2**30, jnp.int32)
+    q = jnp.asarray(rng.normal(size=(2, w, nkv, g, hd)), jnp.float32)
+
+    timings: Dict[VerifyTileConfig, float] = {}
+    for t in candidates:
+        us = _time_us(
+            lambda qv, kv, vv: verify_window_attend_pallas(
+                qv, kv, vv, pt, pos, win, block_s=t.block_s,
+                interpret=interpret),
+            q, kp, vp, iters=iters)
+        timings[t] = us
+    best = min(timings, key=timings.get)
+    return best, timings
+
+
+def get_verify_tiles(
+    s: int,
+    w: int,
+    nkv: int,
+    g: int,
+    hd: int,
+    kv_dtype=jnp.float32,
+    *,
+    page_size: int = 16,
+    platform: Optional[str] = None,
+    allow_measure: bool = False,
+    interpret: bool = True,
+    cache: Optional[AutotuneCache] = None,
+) -> Optional[VerifyTileConfig]:
+    """Resolve the verify-window staging: cache hit → measured → heuristic.
+
+    Returns ``None`` when no staging fits the VMEM budget — the caller
+    falls back to the portable XLA lowering.  Mirrors :func:`get_tiles`
+    but stores entries under the ``verify`` namespace of the same cache.
+    """
+    platform = platform or jax.default_backend()
+    cache = cache if cache is not None else get_default_cache()
+    key = verify_shape_key(platform, s, w, nkv, g, hd, kv_dtype)
+    hit = cache.get(key, cls=VerifyTileConfig)
+    if hit is not None:
+        return hit
+    kv_itemsize = jnp.dtype(kv_dtype).itemsize
+    cands = verify_candidate_tiles(s, w, nkv, g, hd, kv_itemsize, page_size)
+    if not cands:
+        return None
+    if allow_measure or os.environ.get("REPRO_AUTOTUNE") == "1":
+        best, timings = measure_verify_tiles(
+            s, w, nkv, g, hd, kv_dtype, page_size=page_size,
+            interpret=interpret, candidates=cands)
+        cache.put(key, best, us=timings[best])
+        try:
+            cache.save()
+        except OSError:
+            pass  # read-only filesystem: keep the in-memory entry
+        return best
+    return cands[0]

@@ -157,6 +157,12 @@ def main() -> None:
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable radix prefix reuse (paged engine): every "
                          "request prefills from scratch")
+    ap.add_argument("--verify-backend", default="auto",
+                    choices=("auto", "scan", "fused"),
+                    help="speculative verify-window implementation: 'scan' "
+                         "replays the window token-by-token (oracle), "
+                         "'fused' runs the layer-major fused window; "
+                         "'auto' honours REPRO_VERIFY_BACKEND then fused")
     ap.add_argument("--amm", action="store_true",
                     help="serve MLPs through the LUT-MU path")
     ap.add_argument("--amm-backend", default="auto",
@@ -260,6 +266,7 @@ def main() -> None:
                   prefill_chunk=args.prefill_chunk,
                   num_pages=args.num_pages,
                   prefix_cache=not args.no_prefix_cache,
+                  verify_backend=args.verify_backend,
                   compute_dtype=dtype, mesh=mesh, recorder=rec)
 
     if args.speculative:

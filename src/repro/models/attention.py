@@ -19,17 +19,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import fused_verify as FV
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 
 Array = jax.Array
 
-NEG_INF = -1e30
+# Single source of truth in kernels/fused_verify.py (the fused verify
+# window shares the mask/softmax/rescale math bit-for-bit); re-exported
+# here because every cache path builds on them.
+NEG_INF = FV.NEG_INF
 
 # §Perf-C3: static dequant scale for the int8 KV cache.  In production this
 # is calibrated offline per (layer, head) like the LUT quantisation scales;
 # a single constant keeps the dry-run program shape identical.
-KV_INT8_SCALE = 0.05
+KV_INT8_SCALE = FV.KV_INT8_SCALE
 
 
 def init_attn_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
@@ -243,55 +247,32 @@ def _quantize_kv_int8(k: Array, v: Array) -> Tuple[Array, Array]:
 def _decode_attend(qg: Array, cache_k: Array, cache_v: Array, pos_b: Array,
                    window: Optional[Array]) -> Array:
     """Masked one-token attention read over a ``(B, S, n_kv, hd)`` cache
-    view.  Shared by the slot cache and the paged cache (which passes a
-    page-table *gather* of its physical pages) so the two read paths cannot
-    drift — the paged engine's bit-identical-token guarantee rests on this
-    being literally the same computation.
+    view.  Shared by the slot cache, the paged cache (which passes a
+    page-table *gather* of its physical pages) and the fused verify window
+    so the read paths cannot drift — the paged engine's
+    bit-identical-token guarantee rests on this being literally the same
+    computation.  The body lives in ``kernels/fused_verify.py`` (which the
+    Pallas verify kernel mirrors reduction-for-reduction).
 
     qg: (B, 1, n_kv, g, hd); returns (B, 1, n_kv, g, hd) float.
     """
-    hd = qg.shape[-1]
-    s_max = cache_k.shape[1]
-    kv_pos = jnp.arange(s_max)
-    valid = kv_pos[None, :] <= pos_b[:, None]  # (B, S_max)
-    if window is not None:
-        valid = valid & (kv_pos[None, :] > pos_b[:, None] - window)
-    scale = 1.0 / np.sqrt(hd)
-    if cache_k.dtype == jnp.int8:
-        # §Perf-C3: int8 KV cache.  Decode is KV-bandwidth-bound, so halving
-        # cache bytes halves the dominant roofline term.  q and the softmax
-        # weights are quantised on the fly (they are tiny); the int8×int8
-        # dot accumulates in int32 on the MXU and is rescaled afterwards.
-        sq = jnp.max(jnp.abs(qg), axis=(-1,), keepdims=True) / 127.0 + 1e-9
-        q_i8 = jnp.clip(jnp.round(qg / sq), -127, 127).astype(jnp.int8)
-        logits = jax.lax.dot_general(
-            q_i8, cache_k,
-            (((4,), (3,)), ((0, 2), (0, 2))),  # contract hd; batch b, n_kv
-            preferred_element_type=jnp.int32)
-        # dims: (b, n_kv, 1(s), g, t) → (b, n_kv, g, s, t)
-        logits = logits.transpose(0, 1, 3, 2, 4).astype(jnp.float32)
-        logits = logits * (sq.transpose(0, 2, 3, 1, 4) * KV_INT8_SCALE * scale)
-        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
-        w = jax.nn.softmax(logits, axis=-1)
-        w_i8 = jnp.clip(jnp.round(w * 127.0), 0, 127).astype(jnp.int8)
-        out = jax.lax.dot_general(
-            w_i8, cache_v,
-            (((4,), (1,)), ((0, 1), (0, 2))),  # contract t; batch b, n_kv
-            preferred_element_type=jnp.int32)
-        # (b, n_kv, g, s, hd) → scale back
-        out = out.astype(jnp.float32) * (KV_INT8_SCALE / 127.0)
-        out = out.transpose(0, 3, 1, 2, 4)  # (b, s, n_kv, g, hd)
-    else:
-        # accumulate in f32 via preferred_element_type — casting the
-        # (possibly multi-GiB, seq-sharded) cache itself to f32 would
-        # materialise a full f32 copy in HBM.
-        logits = jnp.einsum("bsngh,btnh->bngst", qg, cache_k,
-                            preferred_element_type=jnp.float32) * scale
-        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
-        w = jax.nn.softmax(logits, axis=-1)
-        out = jnp.einsum("bngst,btnh->bsngh", w.astype(cache_v.dtype),
-                         cache_v, preferred_element_type=jnp.float32)
-    return out
+    return FV.decode_attend(qg, cache_k, cache_v, pos_b, window)
+
+
+def _paged_view(k_pages: Array, v_pages: Array, page_table: Array,
+                nkv: int, hd: int) -> Tuple[Array, Array]:
+    """Gather the logical ``(B, S, n_kv, hd)`` view of the physical pages.
+
+    THE paged-cache read: decode, chunked prefill and the fused verify
+    window all gather through this one helper, so "each step reads its
+    pages exactly once" is structural.  Under a mesh the pages shard over
+    the DP axis and XLA inserts the cross-shard collective; the gather is
+    donation-safe under jit.
+    """
+    b = page_table.shape[0]
+    k_view = k_pages[page_table].reshape(b, -1, nkv, hd)
+    v_view = v_pages[page_table].reshape(b, -1, nkv, hd)
+    return k_view, v_view
 
 
 def decode_step(params: dict, x: Array, cfg: ModelConfig,
@@ -366,12 +347,94 @@ def paged_decode_step(params: dict, x: Array, cfg: ModelConfig,
     off = pos_b % ps
     k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
-    k_view = k_pages[page_table].reshape(b, -1, nkv, hd)
-    v_view = v_pages[page_table].reshape(b, -1, nkv, hd)
+    k_view, v_view = _paged_view(k_pages, v_pages, page_table, nkv, hd)
     qg = _grouped(q, nkv)
     out = _decode_attend(qg, k_view, v_view, pos_b, window)
     out = out.reshape(b, 1, nq * hd).astype(x.dtype)
     return out @ params["wo"].astype(x.dtype), (k_pages, v_pages)
+
+
+def paged_verify_window(params: dict, x: Array, cfg: ModelConfig,
+                        k_pages: Array, v_pages: Array, page_table: Array,
+                        pos: Array, n_valid: Array, window: Optional[Array],
+                        attend_impl: str = "auto",
+                        ) -> Tuple[Array, Tuple[Array, Array]]:
+    """One layer's attention over the whole speculative-verify window.
+
+    x: (B, W, D) — the (already ln1-normalised) hidden states of the
+    ``W = k+1`` window tokens; pos: (B,) first window position per row;
+    n_valid: (B,) real tokens in each row's window (the rest scatter to
+    the trash page, exactly like ``paged_decode_step``'s ``write_ok``).
+
+    Bit-identical to W successive ``paged_decode_step`` attention blocks
+    while gathering the page view **once** instead of W times:
+
+    * Q/K/V are projected per token inside a ``lax.scan`` — every matmul
+      sees the oracle's exact ``(B, 1, ·)`` shapes, so XLA cannot re-block
+      a reduction differently;
+    * all W keys/values scatter in one batched page write (real slots are
+      writer-exclusive, trash-slot collisions are never read unmasked);
+    * every window position then attends against the single gathered view
+      under its own ``kv_pos <= pos + j`` mask — later window slots are
+      masked to exact zeros, which is why the W reads need no sequential
+      replay (the scan oracle's later-token writes were invisible to
+      earlier tokens for the same reason).
+
+    ``attend_impl``: ``auto`` → the Pallas kernel on TPU (pages staged
+    through VMEM, never materialising the view in HBM), the portable XLA
+    lowering elsewhere or when no staging fits the VMEM budget.
+    """
+    b, w, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    offs = jnp.arange(w, dtype=jnp.int32)
+
+    def proj(_, xs):
+        xj, off = xs  # (B, D), scalar window offset
+        q, k, v = _project_qkv(params, xj[:, None], cfg, (pos_b + off)[:, None])
+        if k_pages.dtype == jnp.int8:
+            k, v = _quantize_kv_int8(k, v)
+        return None, (q[:, 0], k[:, 0], v[:, 0])
+
+    _, (qs, ks, vs) = jax.lax.scan(proj, None, (jnp.swapaxes(x, 0, 1), offs))
+    q = jnp.swapaxes(qs, 0, 1)                       # (B, W, nq, hd)
+    k = jnp.swapaxes(ks, 0, 1).astype(k_pages.dtype)
+    v = jnp.swapaxes(vs, 0, 1).astype(v_pages.dtype)
+
+    ps = k_pages.shape[1]
+    trash = k_pages.shape[0] - 1
+    rows = jnp.arange(b)
+    wpos = pos_b[:, None] + offs[None, :]            # (B, W) logical pos
+    phys = jnp.where(offs[None, :] < n_valid[:, None],
+                     page_table[rows[:, None], wpos // ps], trash)
+    off = wpos % ps
+    k_pages = k_pages.at[phys, off].set(k)
+    v_pages = v_pages.at[phys, off].set(v)
+
+    qg = _grouped(q, nkv)                            # (B, W, n_kv, g, hd)
+    impl = FV.resolve_impl(attend_impl)
+    tiles = None
+    if impl == "pallas":
+        from repro.kernels import autotune as AT
+        tiles = AT.get_verify_tiles(
+            page_table.shape[1] * ps, w, nkv, nq // nkv, hd, k_pages.dtype,
+            page_size=ps)
+    if tiles is not None:
+        win = jnp.asarray(2**30, jnp.int32) if window is None else window
+        out = FV.verify_window_attend_pallas(
+            qg, k_pages, v_pages, page_table, pos_b, win,
+            block_s=tiles.block_s, interpret=FV.default_interpret())
+    else:
+        k_view, v_view = _paged_view(k_pages, v_pages, page_table, nkv, hd)
+        out = FV.verify_window_attend(qg, k_view, v_view, pos_b, window)
+
+    def proj_o(_, oj):  # (B, n_kv, g, hd) — the oracle's (B, 1, ·) @ wo
+        o = oj.reshape(b, 1, nq * hd).astype(x.dtype)
+        return None, (o @ params["wo"].astype(x.dtype))[:, 0]
+
+    _, outs = jax.lax.scan(proj_o, None, jnp.swapaxes(out, 0, 1))
+    return jnp.swapaxes(outs, 0, 1), (k_pages, v_pages)
 
 
 def paged_prefill_chunk(params: dict, x: Array, cfg: ModelConfig,
@@ -410,8 +473,9 @@ def paged_prefill_chunk(params: dict, x: Array, cfg: ModelConfig,
     off = idx % ps
     k_pages = k_pages.at[phys, off].set(k[0].astype(k_pages.dtype))
     v_pages = v_pages.at[phys, off].set(v[0].astype(v_pages.dtype))
-    k_view = k_pages[page_row].reshape(1, -1, nkv, hd)
-    v_view = v_pages[page_row].reshape(1, -1, nkv, hd)
+    # the chunk reads its pages exactly once, through the same gather the
+    # decode step and the fused verify window use
+    k_view, v_view = _paged_view(k_pages, v_pages, page_row[None], nkv, hd)
     if k_pages.dtype == jnp.int8:
         # int8 pages: prefill reads the dequantised view in float (mirrors
         # the fixed-slot engine, whose prefill is float regardless)

@@ -18,6 +18,7 @@ One code path covers all 10 assigned architectures:
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -36,6 +37,26 @@ Constrain = Callable[[Array, str], Array]
 _id: Constrain = lambda x, kind: x
 
 _GLOBAL_WINDOW = np.int32(2**30)  # "no window" sentinel for flag arrays
+
+# Speculative-verify window implementations (see paged_verify_step):
+# "scan" replays one exact paged_decode_step per window position (the
+# differential oracle); "fused" is the layer-major one-gather-per-layer
+# restructure backed by kernels/fused_verify.py.  Both are bit-identical
+# on greedy streams — the suites in tests/test_speculative.py pin it.
+VERIFY_BACKENDS = ("scan", "fused")
+
+
+def resolve_verify_backend(backend: str = "auto") -> str:
+    """``auto`` → ``$REPRO_VERIFY_BACKEND`` if set, else ``fused``."""
+    if backend == "auto":
+        backend = os.environ.get("REPRO_VERIFY_BACKEND", "auto")
+    if backend == "auto":
+        backend = "fused"
+    if backend not in VERIFY_BACKENDS:
+        raise ValueError(
+            f"verify backend must be 'auto' or one of {VERIFY_BACKENDS}, "
+            f"got {backend!r}")
+    return backend
 
 
 # ---------------------------------------------------------------------------
@@ -595,7 +616,8 @@ def paged_decode_step(params: dict, token: Array, pos: Array,
 def paged_verify_step(params: dict, tokens: Array, pos: Array,
                       n_valid: Array, page_table: Array, cache: dict,
                       cfg: ModelConfig, *, constrain: Constrain = _id,
-                      compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+                      compute_dtype=jnp.bfloat16,
+                      backend: str = "auto") -> Tuple[Array, dict]:
     """Multi-token target step: per-position logits for a whole verify
     window in **one** compiled program.
 
@@ -610,16 +632,34 @@ def paged_verify_step(params: dict, tokens: Array, pos: Array,
     ``argmax(logits[b, j])`` is the token the target would emit after
     ``tokens[b, :j+1]``.
 
-    Implementation note: this is ``paged_prefill_chunk`` generalised to a
-    batch of rows at per-row offsets, but deliberately built as a
-    ``lax.scan`` of the **exact** :func:`paged_decode_step` computation
-    rather than one chunk-wide attention: a W-wide masked softmax is
-    mathematically identical to W one-token reads but not *bitwise*
-    identical (different reduction shapes), and the speculative engine's
-    whole contract is that accepted streams bit-match plain decode.  The
-    scan keeps one dispatch per verify window (the throughput win) while
-    making bit-exactness structural rather than numerical luck.
+    Two implementations, selected by ``backend`` (``auto`` honours
+    ``$REPRO_VERIFY_BACKEND``, then defaults to ``fused``):
+
+    * ``scan`` — the differential oracle: a ``lax.scan`` of the **exact**
+      :func:`paged_decode_step` computation, one window position at a
+      time.  Bit-exactness to plain decode is trivially structural, but
+      every layer re-gathers its page view W times.
+    * ``fused`` — the layer-major restructure
+      (:func:`attention.paged_verify_window` +
+      ``kernels/fused_verify.py``): per layer the page view is gathered
+      once and all W positions attend against it, each under its own
+      causal mask, with every matmul still issued at the oracle's
+      per-token shapes.  Token ``j``'s layer-``l`` K/V depends only on
+      its layer-``l-1`` hidden state, so swapping the loop nest from
+      token-major to layer-major changes no value — the differential
+      suites in ``tests/test_speculative.py`` pin the two backends
+      bit-identical.
+
+    A W-wide masked softmax would be mathematically identical but not
+    *bitwise* identical (different reduction shapes); both backends
+    therefore keep W one-token-shaped reads — the fused one just stops
+    paying the gather W times.
     """
+    backend = resolve_verify_backend(backend)
+    if backend == "fused":
+        return _paged_verify_step_fused(
+            params, tokens, pos, n_valid, page_table, cache, cfg,
+            constrain=constrain, compute_dtype=compute_dtype)
     w = tokens.shape[1]
 
     def body(cache, xs):
@@ -633,6 +673,53 @@ def paged_verify_step(params: dict, tokens: Array, pos: Array,
     cache, logits = jax.lax.scan(
         body, cache, (tokens.T, jnp.arange(w, dtype=jnp.int32)))
     return jnp.swapaxes(logits, 0, 1), cache  # (B, W, V)
+
+
+def _paged_verify_step_fused(params: dict, tokens: Array, pos: Array,
+                             n_valid: Array, page_table: Array, cache: dict,
+                             cfg: ModelConfig, *, constrain: Constrain = _id,
+                             compute_dtype=jnp.bfloat16) -> Tuple[Array, dict]:
+    """Layer-major fused verify window (see :func:`paged_verify_step`).
+
+    Outer scan over layers, ``attention.paged_verify_window`` per layer
+    (one page gather, W masked attends, per-token projections), then
+    per-token head matmuls — bit-identical to the ``scan`` oracle at
+    every in-window position.
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged decode path")
+    cd = compute_dtype
+    b, w = tokens.shape
+    h = params["embed"].astype(cd)[tokens]  # (B, W, D)
+    windows = window_flags(cfg)
+
+    def body(carry, xs):
+        hh = carry
+        lp, ck, cv, win = xs
+        out, (nk, nv) = A.paged_verify_window(
+            lp["attn"], L.rms_norm(hh, lp["ln1"], cfg.norm_eps), cfg,
+            ck, cv, page_table, pos, n_valid, win)
+        hh = constrain(hh + out, "activation")
+        mlp_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+
+        def mlp_tok(_, mj):  # (B, D) — the oracle's (B, 1, D) MLP shapes
+            return None, _mlp_out(lp, mj[:, None], cfg, constrain, cd)[:, 0]
+
+        _, mo = jax.lax.scan(mlp_tok, None, jnp.swapaxes(mlp_in, 0, 1))
+        hh = constrain(hh + jnp.swapaxes(mo, 0, 1), "activation")
+        return hh, (nk, nv)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"], windows))
+    hn = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+    def head_tok(_, hj):  # (B, D) — the oracle's (B, 1, D) head matmul
+        logits = (hj[:, None] @ params["lm_head"].astype(cd)
+                  ).astype(jnp.float32)
+        return None, constrain(logits, "logits")[:, 0]
+
+    _, logits = jax.lax.scan(head_tok, None, jnp.swapaxes(hn, 0, 1))
+    return jnp.swapaxes(logits, 0, 1), dict(cache, k=nk, v=nv)  # (B, W, V)
 
 
 def paged_draft_loop(params: dict, token: Array, pos: Array, n_valid: Array,

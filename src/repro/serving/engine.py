@@ -182,12 +182,18 @@ class ServeEngine:
                  slots: int = None, max_len: int = 256, page_size: int = 16,
                  prefill_chunk: int = 32, num_pages: int = None,
                  prefix_cache: bool = True, compute_dtype=jnp.float32,
-                 mesh=None, recorder=None):
+                 mesh=None, recorder=None, verify_backend: str = "auto"):
         if not MD.supports_paged(cfg):
             raise ValueError(
                 f"family {cfg.family!r} has no paged decode path — serve it "
                 "with FixedSlotEngine")
         self.cfg = cfg
+        # speculative verify-window implementation ("scan" oracle vs the
+        # fused layer-major window — see models.model.paged_verify_step).
+        # Resolved once here (env override included) so the jitted round
+        # programs close over a fixed choice; the plain engine never
+        # verifies but stores it for SpeculativeEngine and engine cloning.
+        self.verify_backend = MD.resolve_verify_backend(verify_backend)
         # observability (obs.py): the recorder threads through the
         # scheduler, cache and allocator so request lifecycle, pool and
         # swap telemetry all land in one registry.  Every hook site is
@@ -209,8 +215,14 @@ class ServeEngine:
         self._uid = itertools.count()
 
         dp = 1 if mesh is None else MeshAxes.for_mesh(mesh).dp_size(mesh)
+        # §Perf-C3: the int8-quantised KV cache is a model feature
+        # (cfg.amm.kv_int8) — allocate the pool accordingly, matching the
+        # dtype launch/dryrun.py budgets.  The decode/prefill/verify paths
+        # all key the quantise-on-write off the pool dtype.
+        self.kv_dtype = (jnp.int8 if (cfg.amm.enabled and cfg.amm.kv_int8)
+                         else compute_dtype)
         self.kv = PagedKVCache(cfg, num_pages=num_pages, page_size=ps,
-                               dtype=compute_dtype, pad_to=dp,
+                               dtype=self.kv_dtype, pad_to=dp,
                                recorder=recorder)
         self.sched = Scheduler(
             max_batch=self.max_batch, allocator=self.kv.allocator,
@@ -659,7 +671,8 @@ def _family_engine(params, cfg: ModelConfig, **kwargs):
     max_batch = kwargs.pop("max_batch", None)
     if max_batch is not None:
         kwargs.setdefault("slots", max_batch)
-    for k in ("page_size", "prefill_chunk", "num_pages", "prefix_cache"):
+    for k in ("page_size", "prefill_chunk", "num_pages", "prefix_cache",
+              "verify_backend"):
         kwargs.pop(k, None)
     return FixedSlotEngine(params, cfg, **kwargs)
 

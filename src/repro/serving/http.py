@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import asyncio
 import json
+import math
 import time
 from typing import Dict, Optional
 
@@ -64,6 +65,18 @@ class _TokenBucket:
             self.tokens -= 1.0
             return True
         return False
+
+    def retry_after(self) -> int:
+        """Whole seconds until the bucket can serve one request.
+
+        ``Retry-After`` is an integer header (RFC 9110 §10.2.3): the true
+        deficit ``(1 - tokens) / rate`` is fractional, and naive rounding
+        turns any sub-second wait into ``Retry-After: 0`` — which clients
+        read as "retry immediately", defeating the limiter.  Ceil the
+        deficit and clamp to at least one second instead.
+        """
+        deficit = max(0.0, 1.0 - self.tokens)
+        return max(1, math.ceil(deficit / self.rate))
 
 
 class AsyncServer:
@@ -200,14 +213,17 @@ class AsyncServer:
         await self._plain(writer, 200, obs.to_prometheus())
 
     # -- streaming generation ----------------------------------------------
-    def _check_rate(self, tenant: str) -> bool:
+    def _check_rate(self, tenant: str) -> Optional[int]:
+        """``None`` when admitted, else the ``Retry-After`` seconds."""
         if not self.rate_limit:
-            return True
+            return None
         bucket = self._buckets.get(tenant)
         if bucket is None:
             bucket = self._buckets[tenant] = _TokenBucket(
                 self.rate_limit, self.rate_burst)
-        return bucket.try_take()
+        if bucket.try_take():
+            return None
+        return bucket.retry_after()
 
     async def _generate(self, reader, writer, headers, body) -> None:
         try:
@@ -218,10 +234,11 @@ class AsyncServer:
                               'body must be JSON with "prompt": [ints]\n')
             return
         tenant = headers.get("x-tenant") or spec.get("tenant") or "default"
-        if not self._check_rate(tenant):
+        retry = self._check_rate(tenant)
+        if retry is not None:
             await self._plain(writer, 429,
                               f"tenant {tenant!r} over rate limit\n",
-                              extra="Retry-After: 1\r\n")
+                              extra=f"Retry-After: {retry}\r\n")
             return
 
         from repro.serving.sampling import SamplingParams

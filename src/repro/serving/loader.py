@@ -58,7 +58,8 @@ def _fixed_kwargs(kwargs):
     slots = kwargs.pop("max_batch", None)
     if slots is not None:
         kwargs.setdefault("slots", slots)
-    for k in ("page_size", "prefill_chunk", "num_pages", "prefix_cache"):
+    for k in ("page_size", "prefill_chunk", "num_pages", "prefix_cache",
+              "verify_backend"):
         kwargs.pop(k, None)
     return kwargs
 

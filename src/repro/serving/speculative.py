@@ -51,11 +51,14 @@ logical slot in both caches, and admission / chunked prefill / eviction /
 host swap / cancellation all come from the PR-4 machinery unchanged —
 swap simply copies both pools.
 
-Why bit-exactness holds: the verify step is a ``lax.scan`` of the *exact*
-single-token :func:`~repro.models.model.paged_decode_step` computation —
-same shapes, same reduction order — so each accepted token's logits are
-bitwise the ones plain :class:`~repro.serving.engine.ServeEngine` would
-have computed.  On top of that the RNG streams line up by construction:
+Why bit-exactness holds: the verify step issues every reduction at the
+*exact* single-token :func:`~repro.models.model.paged_decode_step`
+shapes — either literally (the ``scan`` oracle backend) or layer-major
+with the page view gathered once per layer (the default ``fused``
+backend, ``kernels/fused_verify.py``; see docs/kernels.md) — so each
+accepted token's logits are bitwise the ones plain
+:class:`~repro.serving.engine.ServeEngine` would have computed.  On top
+of that the RNG streams line up by construction:
 every draw is keyed by ``(request seed, emission index, role)``, so the
 bonus token on full acceptance uses exactly the uniform the plain engine
 would have used for that position.  The differential suite
@@ -128,11 +131,13 @@ class SpeculativeEngine(ServeEngine):
         # copies both pools)
         self.kv_draft = PagedKVCache(
             self.cfg, num_pages=self.kv.num_pages, page_size=self.page_size,
-            dtype=self.cd, allocator=self.kv.allocator, recorder=self.obs)
+            dtype=self.kv_dtype, allocator=self.kv.allocator,
+            recorder=self.obs)
         assert self.kv_draft.trash == self.kv.trash
         self._draft_host: Dict[int, HostKV] = {}  # uid → swapped draft KV
 
         cfg_t, cfg_d, cd, k = self.cfg, self.draft_cfg, self.cd, self.spec_k
+        vb = self.verify_backend  # resolved ("scan"|"fused") by ServeEngine
 
         def _round(pt, pd, token, pos, n_valid, table, seed, t0, temp,
                    top_k, top_p, cache_t, cache_d):
@@ -155,7 +160,7 @@ class SpeculativeEngine(ServeEngine):
             window = jnp.concatenate([token, draft], axis=1)  # (B, k+1)
             logits, cache_t = MD.paged_verify_step(
                 pt, window, pos, n_valid, table, cache_t, cfg_t,
-                compute_dtype=cd)
+                compute_dtype=cd, backend=vb)
             p_probs = S.sampling_probs(logits, temp[:, None],
                                        top_k[:, None], top_p[:, None])
             accepted, emit = S.speculative_accept(
@@ -177,7 +182,7 @@ class SpeculativeEngine(ServeEngine):
             window = jnp.concatenate([token, draft], axis=1)  # (B, k+1)
             logits, cache_t = MD.paged_verify_step(
                 pt, window, pos, n_valid, table, cache_t, cfg_t,
-                compute_dtype=cd)
+                compute_dtype=cd, backend=vb)
             target = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             ok = (draft == target[:, :-1]) & (
                 jnp.arange(k)[None, :] < n_valid[:, None] - 1)

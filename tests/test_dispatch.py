@@ -167,8 +167,59 @@ def test_autotune_cache_roundtrip(tmp_path):
 def test_autotune_cache_tolerates_corruption(tmp_path):
     path = tmp_path / "cache.json"
     path.write_text("{not json")
-    cache = AT.AutotuneCache(path)
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        cache = AT.AutotuneCache(path)
     assert len(cache) == 0
+    # a save from the degraded cache rewrites the file cleanly
+    key = AT.shape_key("cpu", "fused", 8, 2, 16, 2, jnp.float32)
+    cache.put(key, AT.TileConfig(8, 128, 2), us=1.0)
+    cache.save()
+    assert AT.AutotuneCache(path).get(key) == AT.TileConfig(8, 128, 2)
+
+
+def test_autotune_cache_save_merges_concurrent_writers(tmp_path):
+    """Lost-update regression: two processes tuning different shapes
+    against one cache file must BOTH survive — save() used to write its
+    in-memory snapshot in place, so the second save clobbered the first."""
+    path = tmp_path / "cache.json"
+    a = AT.AutotuneCache(path)
+    b = AT.AutotuneCache(path)  # opened before a saves (sees empty file)
+    ka = AT.shape_key("cpu", "fused", 16, 4, 32, 2, jnp.float32)
+    kb = AT.shape_key("cpu", "fused", 64, 8, 128, 4, jnp.int8)
+    a.put(ka, AT.TileConfig(16, 128, 4), us=10.0)
+    b.put(kb, AT.TileConfig(64, 256, 8), us=20.0)
+    a.save()
+    b.save()  # merge-on-save: must union with a's entry, not replace it
+    merged = AT.AutotuneCache(path)
+    assert merged.get(ka) == AT.TileConfig(16, 128, 4)
+    assert merged.get(kb) == AT.TileConfig(64, 256, 8)
+    assert len(merged) == 2
+    # the in-memory writer wins on a genuine key conflict (it just measured)
+    b.put(ka, AT.TileConfig(8, 128, 2), us=5.0)
+    b.save()
+    assert AT.AutotuneCache(path).get(ka) == AT.TileConfig(8, 128, 2)
+    # no per-pid tmp files left behind
+    assert list(tmp_path.glob("*.tmp.*")) == []
+
+
+def test_default_cache_corruption_degrades_not_crashes(tmp_path,
+                                                       monkeypatch):
+    """Garbage bytes at the default cache path (a process killed
+    mid-write) must leave dispatch fully working: empty cache + warning,
+    not a crash at import/first-dispatch."""
+    path = tmp_path / "garbage.json"
+    path.write_bytes(b'{"cpu|fused|b16\x00\xff TRUNCATED')
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    monkeypatch.setattr(AT, "_default_cache", None)  # force re-open
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        cache = AT.get_default_cache()
+    assert len(cache) == 0
+    # dispatch through the degraded default cache still works
+    p, xt = _fit(16, 32, 24, 4, 2)
+    want = D.lutmu_matmul(xt, p, backend="ref")
+    got = D.lutmu_matmul(xt, p, backend="fused", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_get_tiles_prefers_cache_then_heuristic(tmp_path):

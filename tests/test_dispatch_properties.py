@@ -125,3 +125,68 @@ def test_corner_grid_backend_parity(shape, resolution):
     B, Dm, N, C, depth = shape
     for kind in D.INPUT_KINDS:
         _check_backends_agree(B, Dm, N, C, depth, resolution, kind, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# PR-9: the portable fused-verify lowering over a random shape grid.  The
+# property is *bitwise* for every dtype — verify_window_attend is a scan
+# of literally the oracle's decode_attend, so no tolerance is ever needed.
+# ---------------------------------------------------------------------------
+
+
+def _check_verify_window_bitwise(b, w, s, nkv, g, hd, int8, windowed, seed):
+    from repro.kernels import fused_verify as FV
+
+    rng = np.random.default_rng(seed)
+    if int8:
+        kv = jnp.asarray(rng.integers(-127, 128, (b, s, nkv, hd)), jnp.int8)
+        vv = jnp.asarray(rng.integers(-127, 128, (b, s, nkv, hd)), jnp.int8)
+    else:
+        kv = jnp.asarray(rng.normal(size=(b, s, nkv, hd)), jnp.float32)
+        vv = jnp.asarray(rng.normal(size=(b, s, nkv, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, w, nkv, g, hd)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, max(1, s - w), b), jnp.int32)
+    win = jnp.asarray(rng.integers(1, s + 1), jnp.int32) if windowed else None
+    got = FV.verify_window_attend(q, kv, vv, pos, win)
+    msg = (f"b={b} w={w} s={s} nkv={nkv} g={g} hd={hd} int8={int8} "
+           f"windowed={windowed} seed={seed}")
+    for j in range(w):
+        want = FV.decode_attend(q[:, j:j + 1], kv, vv, pos + j, win)
+        np.testing.assert_array_equal(np.asarray(got[:, j]),
+                                      np.asarray(want[:, 0]),
+                                      err_msg=f"{msg} j={j}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_random_verify_window_matches_oracle(data):
+    b = data.draw(st.integers(1, 4), label="b")
+    w = data.draw(st.integers(1, 6), label="w")
+    s = data.draw(st.sampled_from([8, 16, 24, 64]), label="s")
+    nkv = data.draw(st.sampled_from([1, 2]), label="nkv")
+    g = data.draw(st.sampled_from([1, 2, 4]), label="g")
+    hd = data.draw(st.sampled_from([4, 8, 32]), label="hd")
+    int8 = data.draw(st.booleans(), label="int8")
+    windowed = data.draw(st.booleans(), label="windowed")
+    seed = data.draw(st.integers(0, 2**20), label="seed")
+    _check_verify_window_bitwise(b, w, s, nkv, g, hd, int8, windowed, seed)
+
+
+# fixed corners (runs without hypothesis): W=1 degenerates to one decode
+# step, W=S fills the whole view, single-head, GQA fan-out
+VERIFY_CORNERS = [
+    # (b, w, s, nkv, g, hd)
+    (1, 1, 8, 1, 1, 4),
+    (2, 4, 16, 1, 4, 8),
+    (3, 6, 24, 2, 2, 32),
+    (1, 8, 8, 2, 1, 8),
+]
+
+
+@pytest.mark.parametrize("shape", VERIFY_CORNERS)
+@pytest.mark.parametrize("int8", [False, True])
+def test_verify_window_corner_grid(shape, int8):
+    b, w, s, nkv, g, hd = shape
+    for windowed in (False, True):
+        _check_verify_window_bitwise(b, w, s, nkv, g, hd, int8, windowed,
+                                     seed=5)

@@ -166,6 +166,22 @@ def test_http_disconnect_cancels_request(setup):
     eng.sched.check_invariants()
 
 
+def test_token_bucket_retry_after_is_positive_integer():
+    """The unit behind the 429 header: a *sub-second* deficit (fast
+    bucket) must clamp to 1, a slow bucket must report its real deficit —
+    both as positive integers (RFC 9110: Retry-After = delay-seconds)."""
+    from repro.serving.http import _TokenBucket
+
+    fast = _TokenBucket(rate=100.0, burst=1)
+    assert fast.try_take() and not fast.try_take()
+    r = fast.retry_after()
+    assert isinstance(r, int) and r == 1  # 0.01s deficit → clamp, not 0
+    slow = _TokenBucket(rate=0.01, burst=1)
+    assert slow.try_take() and not slow.try_take()
+    assert 1 <= slow.retry_after() <= 101  # ~1/0.01 = 100s deficit, ceil'd
+    assert slow.retry_after() >= 90
+
+
 def test_http_per_tenant_rate_limit(setup):
     """A tenant over its bucket gets 429 + Retry-After; other tenants
     keep their own budget."""
@@ -183,6 +199,12 @@ def test_http_per_tenant_rate_limit(setup):
                 body={"prompt": [1, 2, 3], "max_new_tokens": 2},
                 headers={"X-Tenant": "a"})
             assert status == 429 and "retry-after" in hdrs
+            # Retry-After is an integer header; a sub-second deficit must
+            # round UP, never to "0" (= clients hammering immediately)
+            retry = int(hdrs["retry-after"])
+            assert retry >= 1
+            # rate 0.001/s with a 1-token deficit ≈ 1000s until refill
+            assert retry >= 900
             w.close()
             b1 = await _stream_tokens(server.port, [1, 2, 3], 2, tenant="b")
             assert b1 == a1  # fresh bucket, same deterministic stream

@@ -17,6 +17,7 @@ import dataclasses
 import json
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -378,6 +379,98 @@ def test_bundle_loading_guards(tmp_path):
         (out / "target" / "tensors.npz").read_bytes())
     with pytest.raises(ArtifactError):
         load_bundle(out)
+
+
+# ---------------------------------------------------------------------------
+# PR-9 tentpole: the fused layer-major verify window must be bit-identical
+# to the scan oracle through the whole engine, on the int8 KV path, under
+# every schedule the scan path is pinned against (identical draft, garbage
+# draft, eos truncation inside the window, eviction mid-stream).
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup_int8():
+    """Like ``setup`` but with the int8-quantised KV cache — the path where
+    the fused window's blockwise int32 accumulation is provably exact."""
+    base = _tiny_cfg()
+    cfg = dataclasses.replace(
+        base, amm=dataclasses.replace(base.amm, enabled=True, kv_int8=True))
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    plain = ServeEngine(params, cfg, max_batch=3, max_len=64, page_size=16,
+                        prefill_chunk=4)
+    assert plain.kv.buffers["k"].dtype == jnp.int8  # really the int8 path
+    reqs = [plain.submit(p, max_new_tokens=8) for p in PROMPTS]
+    plain.run_until_drained()
+    oracle = {tuple(r.prompt): list(r.generated) for r in reqs}
+    return cfg, params, oracle
+
+
+@pytest.mark.parametrize("backend", ["scan", "fused"])
+def test_verify_backend_identical_draft_int8(setup_int8, backend):
+    """Both verify backends bit-match the plain int8 engine and keep the
+    identical-draft full-acceptance guarantee."""
+    cfg, params, oracle = setup_int8
+    spec = _drain_spec(params, cfg, params, oracle, spec_k=3,
+                       verify_backend=backend)
+    assert spec.verify_backend == backend
+    assert spec.acceptance_rate == 1.0
+
+
+@pytest.mark.parametrize("backend", ["scan", "fused"])
+def test_verify_backend_garbage_draft_int8(setup_int8, backend):
+    """Garbage drafts reject most of the window — the fused path's
+    rollback/garbage-write handling must still bit-match."""
+    cfg, params, oracle = setup_int8
+    garbage = MD.init_params(cfg, jax.random.PRNGKey(99))
+    spec = _drain_spec(params, cfg, garbage, oracle, spec_k=3,
+                       verify_backend=backend)
+    assert spec.acceptance_rate < 0.5
+
+
+@pytest.mark.parametrize("backend", ["scan", "fused"])
+def test_verify_backend_eos_truncated_window_int8(setup_int8, backend):
+    """eos inside an accepted window truncates emission at the same token
+    under both backends (the window past eos is written then rolled back)."""
+    cfg, params, oracle = setup_int8
+    stream = oracle[(1, 2, 3)]
+    eos = stream[2]
+    spec = SpeculativeEngine(params, cfg, params, spec_k=4, max_batch=1,
+                             max_len=64, page_size=16, prefill_chunk=4,
+                             verify_backend=backend)
+    r = spec.submit([1, 2, 3], max_new_tokens=8, eos_id=eos)
+    spec.run_until_drained()
+    assert r.generated == stream[:3] and r.generated[-1] == eos
+
+
+@pytest.mark.parametrize("backend", ["scan", "fused"])
+def test_verify_backend_eviction_int8(setup_int8, backend):
+    """Undersized pool: host swap of both caches and speculative rollback
+    interleave with the fused window's batched page scatter."""
+    cfg, params, oracle = setup_int8
+    spec = _drain_spec(params, cfg, params, oracle, spec_k=3,
+                       page_size=4, num_pages=9, verify_backend=backend)
+    assert spec.acceptance_rate == 1.0
+
+
+def test_verify_backend_resolution(setup, monkeypatch):
+    """'auto' honours REPRO_VERIFY_BACKEND, defaults to fused, and rejects
+    unknown names at the engine boundary."""
+    cfg, params, _ = setup
+    monkeypatch.delenv("REPRO_VERIFY_BACKEND", raising=False)
+    assert MD.resolve_verify_backend("auto") == "fused"
+    assert MD.resolve_verify_backend("scan") == "scan"
+    monkeypatch.setenv("REPRO_VERIFY_BACKEND", "scan")
+    assert MD.resolve_verify_backend("auto") == "scan"
+    monkeypatch.delenv("REPRO_VERIFY_BACKEND", raising=False)
+    with pytest.raises(ValueError, match="verify backend"):
+        MD.resolve_verify_backend("jit")
+    with pytest.raises(ValueError, match="verify backend"):
+        SpeculativeEngine(params, cfg, params, spec_k=2, max_batch=1,
+                          max_len=64, verify_backend="nope")
+    eng = ServeEngine(params, cfg, max_batch=1, max_len=64,
+                      verify_backend="scan")
+    assert eng.verify_backend == "scan"
 
 
 # ---------------------------------------------------------------------------
