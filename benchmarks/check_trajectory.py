@@ -39,7 +39,13 @@ Checks, in order:
      layer-major verify window at or above ``--min-verify-ratio`` ×
      the scan oracle's speed (default 1.1: gathering each layer's pages
      once instead of W times must actually pay — PR 9).  Presence is
-     enforced by coverage against ``BENCH_PR9.json``.
+     enforced by coverage against ``BENCH_PR9.json``;
+  9. **the overhead claim** — every ``serve/obs_overhead/...`` record
+     shows the metrics-on engine at or above ``--min-obs-ratio`` × the
+     recorder-less engine's tokens/s (default 0.95: a live metrics
+     registry may cost at most 5 % — PR 10's sampled probes and
+     profiler must keep the default-off path free).  Presence is
+     enforced by coverage against ``BENCH_PR10.json``.
 
 Absolute µs numbers are *not* compared — CI machines vary too much; the
 trajectory tracks structure and engine-vs-engine ordering, which are
@@ -70,7 +76,7 @@ def _parse_derived(derived: str) -> dict:
 
 def check(baseline: dict, new: dict, min_ratio: float,
           min_spec_ratio: float = 1.0, min_prefix_ratio: float = 1.0,
-          min_verify_ratio: float = 1.1) -> list:
+          min_verify_ratio: float = 1.1, min_obs_ratio: float = 0.95) -> list:
     errors = []
     if not new.get("ok", False):
         errors.append(f"new run not ok: failed={new.get('failed')} "
@@ -148,6 +154,16 @@ def check(baseline: dict, new: dict, min_ratio: float,
             errors.append(
                 f"{rec['name']}: fused verify window at {ratio:.2f}x the "
                 f"scan oracle (< required {min_verify_ratio:.2f}x)")
+    for rec in [r for r in new.get("records", [])
+                if "/obs_overhead/" in r["name"]]:
+        ratio = _parse_derived(rec["derived"]).get("ratio")
+        if not isinstance(ratio, float):
+            errors.append(f"{rec['name']}: no ratio in derived")
+        elif ratio < min_obs_ratio:
+            errors.append(
+                f"{rec['name']}: metrics-on engine at {ratio:.2f}x the "
+                f"recorder-less engine (< required {min_obs_ratio:.2f}x — "
+                f"observability overhead above budget)")
     engine_recs = [r for r in new.get("records", [])
                    if r["name"].startswith("serve/")
                    and ("/paged/" in r["name"] or "/fixed/" in r["name"])]
@@ -176,12 +192,16 @@ def main(argv=None) -> int:
     ap.add_argument("--min-verify-ratio", type=float, default=1.1,
                     help="required fused/scan verify-window speed ratio "
                          "(the fused kernel must beat the per-token oracle)")
+    ap.add_argument("--min-obs-ratio", type=float, default=0.95,
+                    help="required metrics-on/recorder-less tokens-per-"
+                         "second ratio (observability overhead budget)")
     args = ap.parse_args(argv)
 
     baseline = json.loads(Path(args.baseline).read_text())
     new = json.loads(Path(args.new).read_text())
     errors = check(baseline, new, args.min_ratio, args.min_spec_ratio,
-                   args.min_prefix_ratio, args.min_verify_ratio)
+                   args.min_prefix_ratio, args.min_verify_ratio,
+                   args.min_obs_ratio)
     if errors:
         for e in errors:
             print(f"[trajectory] FAIL: {e}", file=sys.stderr)

@@ -19,7 +19,7 @@ from pathlib import Path
 MODULES = ("fig1_scaling", "fig11_scalability", "fig12_problem_size",
            "fig13_pareto", "table2_e2e", "fig10_depth", "fig9_pruning",
            "resolution_configs", "serve_throughput", "prefix_reuse",
-           "speculative")
+           "speculative", "obs_overhead")
 
 
 def main(argv=None) -> None:

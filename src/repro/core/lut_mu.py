@@ -33,6 +33,29 @@ from repro.kernels import dispatch as D
 
 Array = jax.Array
 
+# Optional approximation-quality probe tap (serving/quality.py).  When a
+# tap is installed, every *eager* LUT-MU forward also reports its input /
+# params / output so the probe can replay the dense reference on the same
+# activations.  Two hard rules keep this observation-only:
+#   * ``None`` (the default) costs one host ``is not None`` check;
+#   * calls under a jit trace are skipped (tracer guard) — the tap only
+#     ever sees concrete arrays, so installed taps cannot change any
+#     compiled program or emitted stream.
+_PROBE_TAP = None
+
+
+def set_probe_tap(tap) -> None:
+    """Install (or clear, with ``None``) the LUT-MU quality-probe tap."""
+    global _PROBE_TAP
+    _PROBE_TAP = tap
+
+
+def _tap_eager(proj: str, x: Array, params: M.MaddnessParams, out: Array,
+               input_kind: str) -> None:
+    if isinstance(x, jax.core.Tracer) or isinstance(out, jax.core.Tracer):
+        return
+    _PROBE_TAP(proj=proj, x=x, params=params, out=out, input_kind=input_kind)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -72,13 +95,19 @@ class AMMLinear:
     # -- forward ------------------------------------------------------------
     def __call__(self, x: Array, *, backend: str = "auto") -> Array:
         """Full-width input path."""
-        return D.lutmu_matmul(x, self.params, backend=backend,
-                              input_kind="full", tiles=self.tiles)
+        y = D.lutmu_matmul(x, self.params, backend=backend,
+                           input_kind="full", tiles=self.tiles)
+        if _PROBE_TAP is not None:
+            _tap_eager("linear", x, self.params, y, "full")
+        return y
 
     def apply_package(self, x_pruned: Array, *, backend: str = "auto") -> Array:
         """Pruned-package input path (chained mode)."""
-        return D.lutmu_matmul(x_pruned, self.params, backend=backend,
-                              input_kind="package", tiles=self.tiles)
+        y = D.lutmu_matmul(x_pruned, self.params, backend=backend,
+                           input_kind="package", tiles=self.tiles)
+        if _PROBE_TAP is not None:
+            _tap_eager("linear", x_pruned, self.params, y, "package")
+        return y
 
     # -- resource accounting (paper Figs. 11/12) -----------------------------
     def lut_bytes(self) -> int:

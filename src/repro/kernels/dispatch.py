@@ -45,6 +45,20 @@ Array = jax.Array
 BACKENDS = ("ref", "unfused", "fused")
 INPUT_KINDS = ("full", "split", "package")
 
+# Optional observability hook (serving/profiler.py): called with static
+# call metadata after backend selection.  Fires at trace time — once per
+# compiled program, never per executed step — and only ever receives
+# python ints/strings (shapes/dtypes/backend), so it cannot leak tracers
+# or perturb compiled computations.  None (the default) costs one host
+# ``is not None`` check per trace.
+_PROFILE_HOOK = None
+
+
+def set_profile_hook(hook) -> None:
+    """Install (or clear, with ``None``) the dispatch-metadata hook."""
+    global _PROFILE_HOOK
+    _PROFILE_HOOK = hook
+
 # Below either threshold the MXU tiles are mostly padding — see docs/kernels.md.
 _MIN_MXU_ROWS = 8
 _MIN_MXU_COLS = 128
@@ -210,6 +224,10 @@ def lutmu_matmul(
     if backend not in BACKENDS:
         raise ValueError(f"backend must be 'auto' or one of {BACKENDS}, "
                          f"got {backend!r}")
+    if _PROFILE_HOOK is not None:
+        _PROFILE_HOOK(backend=backend, input_kind=input_kind, b=int(b),
+                      c=int(c), n=int(n), depth=int(depth),
+                      lut_dtype=str(params.lut.dtype))
 
     if backend != "ref" and tiles is None:
         tiles = AT.get_tiles(
@@ -285,6 +303,10 @@ def lutmu_matmul_sharded(
     if backend not in BACKENDS:
         raise ValueError(f"backend must be 'auto' or one of {BACKENDS}, "
                          f"got {backend!r}")
+    if _PROFILE_HOOK is not None:
+        _PROFILE_HOOK(backend=backend, input_kind="sharded:" + input_kind,
+                      b=int(b_local), c=int(c_local), n=int(n),
+                      depth=int(depth), lut_dtype=str(params.lut.dtype))
     if backend != "ref" and tiles is None:
         tiles = AT.get_tiles(b_local, c_local, n, depth, params.lut.dtype,
                              backend=backend, interpret=interpret)

@@ -38,8 +38,9 @@ from repro.configs import ARCH_IDS, get_config
 from repro.data import TokenStream
 from repro.launch.mesh import make_serve_mesh
 from repro.models import model as MD
-from repro.serving import (AsyncServer, Recorder, SamplingParams,
-                           load_engine, log, summary_table)
+from repro.serving import (AsyncServer, KernelProfiler, QualityProbe,
+                           Recorder, SamplingParams, attach_dispatch_hook,
+                           load_engine, log, slo_report, summary_table)
 
 
 def _artifact_kind(path):
@@ -120,6 +121,8 @@ def _serve_http(engine, args, rec) -> None:
         log("serve", "interrupted; shutting down")
     if rec is not None:
         print(summary_table(rec.registry))
+        if args.slo_report:
+            print(slo_report(rec.slo))
         if args.metrics:
             rec.write_metrics(args.metrics)
             log("serve", f"metrics (Prometheus text format) → {args.metrics}")
@@ -232,6 +235,23 @@ def main() -> None:
                     help="record per-request lifecycle spans and write "
                          "Chrome trace-event JSON to PATH (open in Perfetto "
                          "or chrome://tracing; see docs/observability.md)")
+    ap.add_argument("--quality-probe", type=float, default=0.0,
+                    metavar="RATE",
+                    help="replay this fraction of finished requests through "
+                         "the dense reference: per-layer relative-error "
+                         "histograms, codebook utilisation and dequant "
+                         "saturation (GET /debug/quality; emitted streams "
+                         "are untouched — see docs/observability.md)")
+    ap.add_argument("--profile-every", type=int, default=0, metavar="N",
+                    help="profile every N-th engine step: per-site kernel "
+                         "latency histograms, XLA cost-analysis FLOPs/bytes "
+                         "and a 'kernels' trace lane (0 = off; profiled "
+                         "steps sync, all others keep the zero-overhead "
+                         "path)")
+    ap.add_argument("--slo-report", action="store_true",
+                    help="print the sliding-window SLO health report "
+                         "(tok/s, TTFT/TPOT p50/p99, acceptance, error "
+                         "budgets) after serving; live snapshot at GET /slo")
     args = ap.parse_args()
 
     mesh = _resolve_mesh(args)
@@ -260,7 +280,19 @@ def main() -> None:
     # Chrome trace and GET /metrics; without the flags engines keep the
     # NullRecorder (zero-overhead-off — see docs/observability.md)
     rec = (Recorder(trace=bool(args.trace_out))
-           if (args.metrics or args.trace_out or args.http) else None)
+           if (args.metrics or args.trace_out or args.http
+               or args.quality_probe or args.profile_every
+               or args.slo_report) else None)
+    if rec is not None and args.quality_probe:
+        # `params` is the pre-splice tree: with a --ckpt/random dense model
+        # it still carries the dense mlp weights the probe references
+        # (pure-AMM params degrade to utilisation/saturation tracking)
+        rec.quality = QualityProbe(rec.registry, rate=args.quality_probe,
+                                   dense_params=params)
+    if rec is not None and args.profile_every:
+        rec.profiler = KernelProfiler(rec.registry, tracer=rec.tracer,
+                                      every=args.profile_every)
+        attach_dispatch_hook(rec.registry)
     kwargs = dict(max_batch=max_batch, max_len=args.max_len,
                   page_size=args.page_size,
                   prefill_chunk=args.prefill_chunk,
@@ -337,6 +369,8 @@ def main() -> None:
             f"tokens/round={engine.mean_emitted_per_round:.2f}")
     if rec is not None:
         print(summary_table(rec.registry))
+        if args.slo_report:
+            print(slo_report(rec.slo))
         if args.metrics:
             rec.write_metrics(args.metrics)
             log("serve", f"metrics (Prometheus text format) → {args.metrics}")

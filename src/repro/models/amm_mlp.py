@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import lut_mu as LU
 from repro.core import maddness as M
 from repro.core import pruning as P
 from repro.kernels import dispatch as D
@@ -126,11 +127,15 @@ def amm_mlp_apply(params: dict, x: Array, cfg: ModelConfig,
         params["down_split_dims"], params["down_thresholds"],
         params["lut_down"], params["lut_down_scale"],
         params["lut_down_offset"])
-    if a.prune:
-        # gate/up emitted the cluster-ordered pruned package
-        out = matmul(h, down_p, "package")
-    else:
-        out = matmul(h, down_p, "full")
+    down_kind = "package" if a.prune else "full"
+    # gate/up emitted the cluster-ordered pruned package when pruning is on
+    out = matmul(h, down_p, down_kind)
+    if LU._PROBE_TAP is not None:
+        # quality-probe tap (eager replay only — skipped under jit traces,
+        # so compiled serving programs and emitted streams are untouched)
+        LU._tap_eager("gate", xs, gate_p, gate, "split")
+        LU._tap_eager("up", xs, up_p, up, "split")
+        LU._tap_eager("down", h, down_p, out, down_kind)
     return out.reshape(b, s, d).astype(x.dtype)
 
 

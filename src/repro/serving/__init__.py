@@ -15,10 +15,14 @@ from repro.serving.kv_cache import (PageAllocator, PagedKVCache,  # noqa: F401
                                     PageError)
 from repro.serving.loader import load_engine  # noqa: F401
 from repro.serving.obs import (NULL_RECORDER, MetricsRegistry,  # noqa: F401
-                               NullRecorder, Recorder, Tracer, log,
+                               NullRecorder, Recorder, SloThresholds,
+                               SloTracker, Tracer, log, slo_report,
                                summary_table, validate_chrome_trace,
                                validate_prometheus)
 from repro.serving.prefix import RadixPrefixIndex  # noqa: F401
+from repro.serving.profiler import (KernelProfiler,  # noqa: F401
+                                    attach_dispatch_hook)
+from repro.serving.quality import QualityProbe  # noqa: F401
 from repro.serving.sampling import SamplingParams  # noqa: F401
 from repro.serving.scheduler import Scheduler, StepPlan  # noqa: F401
 from repro.serving.speculative import SpeculativeEngine  # noqa: F401
@@ -52,6 +56,13 @@ __all__ = [
     "summary_table",
     "validate_prometheus",
     "validate_chrome_trace",
+    # deep observability (PR 10)
+    "QualityProbe",
+    "KernelProfiler",
+    "attach_dispatch_hook",
+    "SloTracker",
+    "SloThresholds",
+    "slo_report",
     # deprecated (one release; use load_engine)
     "make_engine",
 ]

@@ -156,6 +156,27 @@ def _sample_batch(logits, rows_reqs, batch: int) -> np.ndarray:
         S.sample_tokens_jit(logits, seed, t, temp, top_k, top_p))
 
 
+def _bind_quality(obs, params, cfg: ModelConfig) -> None:
+    """Point the recorder's quality probe (if one is attached) at this
+    engine's spliced params so sampled probe replays run the model the
+    engine actually serves.  ``bind`` is first-wins, so the target half
+    of a speculative bundle is the one probed."""
+    quality = getattr(obs, "quality", None)
+    if quality is not None:
+        quality.bind(params, cfg)
+
+
+def _profiled_call(obs, site: str, fn, *args):
+    """Route one jitted dispatch through the kernel profiler on profiled
+    steps.  The off path (no recorder, no profiler, or an unprofiled
+    step) is one truthiness check plus one attribute read — no wrapper,
+    no sync — preserving the zero-overhead-off contract."""
+    prof = getattr(obs, "profiler", None) if obs else None
+    if prof is not None and prof.active:
+        return prof.timed(site, fn, *args)
+    return fn(*args)
+
+
 def _drain(engine, max_steps: int):
     """Shared ``run_until_drained`` body: step until idle, and raise —
     rather than silently return a partial result — when the step budget is
@@ -268,6 +289,7 @@ class ServeEngine:
             self.obs.register_jit_site("serve.prefill", self._prefill)
             self.obs.register_jit_site("sampling.sample_tokens",
                                        S.sample_tokens_jit)
+            _bind_quality(self.obs, self.params, self.cfg)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -339,6 +361,10 @@ class ServeEngine:
         """One engine iteration: execute the scheduler's plan — swap-outs,
         swap-ins, copy-on-write clones, at most one prefill chunk, one
         batched decode — and retire finished requests."""
+        if self.obs:
+            prof = getattr(self.obs, "profiler", None)
+            if prof is not None:
+                prof.tick()
         plan = self.sched.schedule()
         resharded = False
         for req, old_pages in plan.swap_out:
@@ -380,7 +406,8 @@ class ServeEngine:
         (the speculative engine prefills its draft cache here too) — the
         chunk bookkeeping around it stays in :meth:`_run_prefill_chunk` so
         budget/eos fixes cannot drift between engines."""
-        logits, self.kv.buffers = self._prefill(
+        logits, self.kv.buffers = _profiled_call(
+            self.obs, "serve.prefill", self._prefill,
             self.params, jnp.asarray(toks),
             jnp.asarray(chunk.start, jnp.int32),
             jnp.asarray(chunk.n_valid, jnp.int32),
@@ -429,7 +456,8 @@ class ServeEngine:
             table[row, : len(req.pages)] = req.pages
         obs = self.obs
         t0 = obs.now() if obs else 0.0
-        logits, self.kv.buffers = self._decode(
+        logits, self.kv.buffers = _profiled_call(
+            self.obs, "serve.decode", self._decode,
             self.params, jnp.asarray(token), jnp.asarray(pos),
             jnp.asarray(table), self.kv.buffers)
         nxt = _sample_batch(logits[:, 0], decode, self.max_batch)
@@ -506,6 +534,7 @@ class FixedSlotEngine:
             self.obs.register_jit_site("fixed.decode", self._decode)
             self.obs.register_jit_site("sampling.sample_tokens",
                                        S.sample_tokens_jit)
+            _bind_quality(self.obs, self.params, self.cfg)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -621,6 +650,10 @@ class FixedSlotEngine:
 
     def step(self) -> List[Request]:
         """One engine iteration: admit, batched decode, retire."""
+        if self.obs:
+            prof = getattr(self.obs, "profiler", None)
+            if prof is not None:
+                prof.tick()
         finished = self._admit()
         if not self.active:
             if self.obs:
@@ -631,7 +664,8 @@ class FixedSlotEngine:
             token[slot, 0] = req.generated[-1] if req.generated else 0
         obs = self.obs
         t0 = obs.now() if obs else 0.0
-        logits, self.cache = self._decode(
+        logits, self.cache = _profiled_call(
+            self.obs, "fixed.decode", self._decode,
             self.params, jnp.asarray(token),
             jnp.asarray(self.pos, jnp.int32), self.cache)
         nxt = _sample_batch(logits[:, 0], list(self.active.items()),

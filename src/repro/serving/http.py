@@ -22,8 +22,26 @@ drivers.  The wire protocol is deliberately minimal HTTP/1.1:
     Prometheus text-format exposition of the engine recorder's registry
     (404 when the engine runs the NullRecorder).
 
+``GET /slo``
+    JSON snapshot of the recorder's SLO health layer (sliding-window
+    tok/s, TTFT/TPOT p50/p99, acceptance drift, error budgets and
+    threshold violations — ``serving/obs.py::SloTracker``).  404 when
+    the engine runs the NullRecorder.
+
+``GET /debug/quality``
+    JSON snapshot of the approximation-quality probe
+    (``serving/quality.py``): per-layer relative-error summaries,
+    codebook dead-bucket counts and dequant saturation fractions.  404
+    when no probe is attached (start serve with ``--quality-probe``).
+
 ``GET /healthz``
     ``200 ok`` — liveness for the CI smoke job.
+
+Requests may carry an ``X-Request-Id`` header: the id is attached to
+the engine request (``Request.client_request_id``), echoed as a trace
+instant on the request's tracer lane, and included in the stream's
+final NDJSON record — so one id correlates the client log line, the
+Perfetto lane and the server stream.
 
 Per-tenant rate limiting is a token bucket (``--rate-limit`` requests
 per second, burst ``--rate-burst``) keyed on the ``X-Tenant`` header
@@ -158,6 +176,10 @@ class AsyncServer:
                 await self._plain(writer, 200, "ok\n")
             elif method == "GET" and path == "/metrics":
                 await self._metrics(writer)
+            elif method == "GET" and path == "/slo":
+                await self._slo(writer)
+            elif method == "GET" and path == "/debug/quality":
+                await self._quality(writer)
             elif method == "POST" and path == "/v1/generate":
                 await self._generate(reader, writer, headers, body)
             else:
@@ -212,6 +234,34 @@ class AsyncServer:
             return
         await self._plain(writer, 200, obs.to_prometheus())
 
+    async def _slo(self, writer) -> None:
+        obs = getattr(self.engine, "obs", None)
+        slo = getattr(obs, "slo", None) if obs else None
+        if slo is None:
+            await self._plain(
+                writer, 404,
+                "engine has no recorder (start serve with --metrics)\n")
+            return
+        await self._json(writer, slo.snapshot())
+
+    async def _quality(self, writer) -> None:
+        obs = getattr(self.engine, "obs", None)
+        quality = getattr(obs, "quality", None) if obs else None
+        if quality is None:
+            await self._plain(
+                writer, 404, "engine has no quality probe (start serve "
+                "with --quality-probe)\n")
+            return
+        await self._json(writer, quality.snapshot())
+
+    async def _json(self, writer, obj: dict) -> None:
+        data = json.dumps(obj, sort_keys=True).encode()
+        writer.write((f"HTTP/1.1 200 OK\r\n"
+                      f"Content-Type: application/json\r\n"
+                      f"Content-Length: {len(data)}\r\n"
+                      "Connection: close\r\n\r\n").encode() + data)
+        await writer.drain()
+
     # -- streaming generation ----------------------------------------------
     def _check_rate(self, tenant: str) -> Optional[int]:
         """``None`` when admitted, else the ``Retry-After`` seconds."""
@@ -251,6 +301,12 @@ class AsyncServer:
             prompt, sampling=sampling,
             max_new_tokens=int(spec.get("max_new_tokens", 16)),
             eos_id=spec.get("eos_id"))
+        client_rid = headers.get("x-request-id")
+        if client_rid:
+            handle._req.client_request_id = client_rid
+            obs = getattr(self.engine, "obs", None)
+            if obs:
+                obs.on_request_id(handle._req, client_rid)
         self._work_evt.set()
         self.requests_served += 1
 
@@ -273,9 +329,11 @@ class AsyncServer:
                                   {"token": int(tok), "index": i})
                 i += 1
             if not cancelled:
-                await self._chunk(writer, {
-                    "done": True, "request_id": handle.request_id,
-                    "tokens": [int(t) for t in handle.tokens()]})
+                final = {"done": True, "request_id": handle.request_id,
+                         "tokens": [int(t) for t in handle.tokens()]}
+                if client_rid:
+                    final["client_request_id"] = client_rid
+                await self._chunk(writer, final)
                 writer.write(b"0\r\n\r\n")
                 await writer.drain()
         except (ConnectionResetError, BrokenPipeError):

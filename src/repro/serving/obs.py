@@ -44,15 +44,18 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import json
+import math
 import os
 import re
 import time
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "Tracer",
-    "Recorder", "NullRecorder", "NULL_RECORDER", "log", "log_enabled",
-    "summary_table", "validate_prometheus", "validate_chrome_trace",
+    "Recorder", "NullRecorder", "NULL_RECORDER", "SloThresholds",
+    "SloTracker", "log", "log_enabled", "summary_table", "slo_report",
+    "validate_prometheus", "validate_chrome_trace",
 ]
 
 
@@ -162,15 +165,20 @@ class Histogram:
     def quantile(self, q: float) -> float:
         """Approximate quantile by linear interpolation within the
         winning bucket (the standard Prometheus ``histogram_quantile``
-        estimate); 0.0 when empty."""
+        estimate); 0.0 when empty.  Observations landing in the implicit
+        ``+Inf`` bucket clamp to the top finite bucket edge — there is no
+        upper bound to interpolate toward, so fabricating one would
+        report latencies that never happened."""
         if not self.count:
             return 0.0
-        rank = q * self.count
+        rank = min(1.0, max(0.0, q)) * self.count
         seen = 0
         for i, c in enumerate(self.counts):
             if seen + c >= rank and c:
+                if i >= len(self.buckets):
+                    return self.buckets[-1]
                 lo = self.buckets[i - 1] if i > 0 else 0.0
-                hi = self.buckets[i] if i < len(self.buckets) else lo * 2 or 1.0
+                hi = self.buckets[i]
                 return lo + (hi - lo) * max(0.0, rank - seen) / c
             seen += c
         return self.buckets[-1]
@@ -253,7 +261,8 @@ class MetricsRegistry:
     def _fmt_labels(labels, extra: str = "") -> str:
         parts = []
         for k, v in labels:
-            escaped = str(v).replace("\\", "\\\\").replace('"', '\\"')
+            escaped = (str(v).replace("\\", "\\\\").replace('"', '\\"')
+                       .replace("\n", "\\n"))
             parts.append(f'{k}="{escaped}"')
         if extra:
             parts.append(extra)
@@ -310,9 +319,14 @@ class Tracer:
     """Accumulates Chrome trace events (``ph: X`` complete spans and
     ``ph: i`` instants) on a monotonic clock.  ``tid`` is the request
     uid, so Perfetto renders one lane per request; engine-wide events
-    (batched decode dispatches) go to the reserved ``tid 0`` lane."""
+    (batched decode dispatches) go to the reserved ``tid 0`` lane, and
+    sampled kernel-profiler spans go to a dedicated ``kernels`` lane
+    (``KERNEL_TID``) so per-lane span-overlap validation keeps holding:
+    a profiled kernel span always nests inside the engine step span on
+    ``tid 0`` and would otherwise trip the overlap check."""
 
     ENGINE_TID = 0
+    KERNEL_TID = 1_000_000_000  # far above any request uid + 1
 
     def __init__(self, clock=time.perf_counter):
         self._clock = clock
@@ -326,7 +340,12 @@ class Tracer:
     def _name_tid(self, tid: int) -> None:
         if tid not in self._named_tids:
             self._named_tids.add(tid)
-            name = "engine" if tid == self.ENGINE_TID else f"req {tid - 1}"
+            if tid == self.ENGINE_TID:
+                name = "engine"
+            elif tid == self.KERNEL_TID:
+                name = "kernels"
+            else:
+                name = f"req {tid - 1}"
             self.events.append({"ph": "M", "name": "thread_name",
                                 "pid": _PID, "tid": tid,
                                 "args": {"name": name}})
@@ -362,6 +381,241 @@ class Tracer:
         self.events = []
         self._named_tids = set()
         self._epoch = self._clock()
+
+
+# ---------------------------------------------------------------------------
+# SLO health layer: sliding-window service levels + error budgets.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SloThresholds:
+    """Service-level objectives the tracker grades the sliding window
+    against.  Zero / ``inf`` disables the corresponding check."""
+
+    ttft_p99_s: float = math.inf   # p99 time-to-first-token ceiling
+    tpot_p99_s: float = math.inf   # p99 time-per-output-token ceiling
+    min_tok_s: float = 0.0         # window throughput floor
+    min_acceptance: float = 0.0    # window speculative-acceptance floor
+    budget_target: float = 0.99    # fraction of samples that must meet SLO
+
+
+class SloTracker:
+    """Sliding-window service-level health, fed by :class:`Recorder`.
+
+    Keeps raw samples (not histogram buckets) over the last ``window_s``
+    seconds so window quantiles are exact, and publishes gauges into the
+    shared registry on every :meth:`snapshot`:
+
+      * ``slo_window_tok_s`` — token throughput over the window;
+      * ``slo_ttft_p50_seconds`` / ``slo_ttft_p99_seconds`` and the
+        ``tpot`` pair — window latency quantiles;
+      * ``slo_window_acceptance`` and ``slo_acceptance_drift`` — window
+        speculative acceptance and its drift from the cumulative rate
+        (a falling window rate on a healthy cumulative one is the early
+        signal that draft quality is degrading);
+      * ``slo_error_budget_remaining{slo=...}`` — 1.0 when every window
+        sample meets the objective, 0.0 once the violating fraction
+        exhausts ``1 - budget_target`` (multi-window burn-rate alerting
+        reads exactly this gauge);
+      * ``slo_violations_total{slo=...}`` — threshold-crossing events
+        (counted once per crossing, not once per snapshot), each paired
+        with a ``log("slo", ...)`` warning.
+
+    Pure host bookkeeping: deque appends on the token path, everything
+    else deferred to ``snapshot()`` (the ``/slo`` endpoint, the
+    ``--slo-report`` summary, and tests call it)."""
+
+    def __init__(self, registry: MetricsRegistry, *,
+                 clock=time.perf_counter, window_s: float = 30.0,
+                 thresholds: Optional[SloThresholds] = None):
+        self.registry = registry
+        self.window_s = float(window_s)
+        self.thresholds = thresholds or SloThresholds()
+        self._clock = clock
+        self._tok: deque = deque()      # (ts, n)
+        self._ttft: deque = deque()     # (ts, seconds)
+        self._tpot: deque = deque()     # (ts, seconds)
+        self._acc: deque = deque()      # (ts, proposed, accepted)
+        self._violating: set = set()
+        r = registry
+        self._g_tok_s = r.gauge(
+            "slo_window_tok_s", "Generated tokens/s over the SLO window")
+        self._g_ttft_p50 = r.gauge(
+            "slo_ttft_p50_seconds", "Window TTFT p50")
+        self._g_ttft_p99 = r.gauge(
+            "slo_ttft_p99_seconds", "Window TTFT p99")
+        self._g_tpot_p50 = r.gauge(
+            "slo_tpot_p50_seconds", "Window TPOT p50")
+        self._g_tpot_p99 = r.gauge(
+            "slo_tpot_p99_seconds", "Window TPOT p99")
+        self._g_acc = r.gauge(
+            "slo_window_acceptance",
+            "Speculative acceptance over the SLO window")
+        self._g_acc_drift = r.gauge(
+            "slo_acceptance_drift",
+            "Window acceptance minus cumulative acceptance")
+        self._g_budget = {
+            name: r.gauge("slo_error_budget_remaining",
+                          "Remaining error budget per objective "
+                          "(1 = clean window, 0 = budget exhausted)",
+                          slo=name)
+            for name in ("ttft", "tpot", "tok_s", "acceptance")}
+        self._c_violations = {
+            name: r.counter("slo_violations_total",
+                            "SLO threshold crossings", slo=name)
+            for name in ("ttft", "tpot", "tok_s", "acceptance")}
+
+    # -- feeds (called from Recorder hooks; O(1) each) ----------------------
+    def note_tokens(self, ts: float, n: int) -> None:
+        self._tok.append((ts, n))
+
+    def note_ttft(self, ts: float, seconds: float) -> None:
+        self._ttft.append((ts, seconds))
+
+    def note_tpot(self, ts: float, seconds: float) -> None:
+        self._tpot.append((ts, seconds))
+
+    def note_acceptance(self, ts: float, proposed: int,
+                        accepted: int) -> None:
+        if proposed > 0:
+            self._acc.append((ts, proposed, accepted))
+
+    # -- window math ---------------------------------------------------------
+    def _trim(self, now: float) -> None:
+        horizon = now - self.window_s
+        for q in (self._tok, self._ttft, self._tpot, self._acc):
+            while q and q[0][0] < horizon:
+                q.popleft()
+
+    @staticmethod
+    def _pct(vals: List[float], q: float) -> float:
+        if not vals:
+            return 0.0
+        s = sorted(vals)
+        return s[min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))]
+
+    def _budget(self, vals: List[float], ok) -> float:
+        """Error budget remaining: 1 − (violating fraction / allowed
+        fraction), clamped to [0, 1]; a sample-free window spends
+        nothing."""
+        if not vals:
+            return 1.0
+        bad = sum(1 for v in vals if not ok(v)) / len(vals)
+        allowed = max(1e-9, 1.0 - self.thresholds.budget_target)
+        return max(0.0, min(1.0, 1.0 - bad / allowed))
+
+    def _check(self, name: str, violated: bool, msg: str) -> None:
+        if violated and name not in self._violating:
+            self._violating.add(name)
+            self._c_violations[name].inc()
+            log("slo", f"WARNING {msg}")
+        elif not violated:
+            self._violating.discard(name)
+
+    def snapshot(self, now: Optional[float] = None) -> dict:
+        """Trim the window, publish the gauges, fire threshold-crossing
+        warnings, and return the health dict the ``/slo`` endpoint
+        serves."""
+        now = self._clock() if now is None else now
+        self._trim(now)
+        th = self.thresholds
+        # throughput: span from oldest sample (not the full window) so a
+        # short burst right after start-up doesn't read as a low rate
+        n_tok = sum(n for _, n in self._tok)
+        span = (now - self._tok[0][0]) if self._tok else 0.0
+        tok_s = n_tok / span if span > 1e-9 else 0.0
+        ttft = [v for _, v in self._ttft]
+        tpot = [v for _, v in self._tpot]
+        ttft_p50, ttft_p99 = self._pct(ttft, 0.5), self._pct(ttft, 0.99)
+        tpot_p50, tpot_p99 = self._pct(tpot, 0.5), self._pct(tpot, 0.99)
+        w_prop = sum(p for _, p, _ in self._acc)
+        w_acc = sum(a for _, _, a in self._acc)
+        win_rate = w_acc / w_prop if w_prop else 0.0
+        c_prop = self.registry.value("spec_proposed_total")
+        c_rate = (self.registry.value("spec_accepted_total") / c_prop
+                  if c_prop else 0.0)
+        drift = win_rate - c_rate if w_prop else 0.0
+        self._g_tok_s.set(tok_s)
+        self._g_ttft_p50.set(ttft_p50)
+        self._g_ttft_p99.set(ttft_p99)
+        self._g_tpot_p50.set(tpot_p50)
+        self._g_tpot_p99.set(tpot_p99)
+        self._g_acc.set(win_rate)
+        self._g_acc_drift.set(drift)
+        budgets = {
+            "ttft": self._budget(ttft, lambda v: v <= th.ttft_p99_s),
+            "tpot": self._budget(tpot, lambda v: v <= th.tpot_p99_s),
+            "tok_s": 1.0 if (not self._tok or tok_s >= th.min_tok_s)
+            else 0.0,
+            "acceptance": 1.0 if (not w_prop
+                                  or win_rate >= th.min_acceptance)
+            else 0.0,
+        }
+        for name, b in budgets.items():
+            self._g_budget[name].set(b)
+        if ttft and math.isfinite(th.ttft_p99_s):
+            self._check("ttft", ttft_p99 > th.ttft_p99_s,
+                        f"TTFT p99 {ttft_p99 * 1e3:.1f}ms over "
+                        f"{th.ttft_p99_s * 1e3:.1f}ms objective")
+        if tpot and math.isfinite(th.tpot_p99_s):
+            self._check("tpot", tpot_p99 > th.tpot_p99_s,
+                        f"TPOT p99 {tpot_p99 * 1e3:.1f}ms over "
+                        f"{th.tpot_p99_s * 1e3:.1f}ms objective")
+        if self._tok and th.min_tok_s > 0:
+            self._check("tok_s", tok_s < th.min_tok_s,
+                        f"window throughput {tok_s:.1f} tok/s under "
+                        f"{th.min_tok_s:.1f} tok/s objective")
+        if w_prop and th.min_acceptance > 0:
+            self._check("acceptance", win_rate < th.min_acceptance,
+                        f"window acceptance {win_rate:.3f} under "
+                        f"{th.min_acceptance:.3f} objective")
+        return {
+            "window_s": self.window_s,
+            "tok_s": tok_s,
+            "ttft_p50_s": ttft_p50, "ttft_p99_s": ttft_p99,
+            "tpot_p50_s": tpot_p50, "tpot_p99_s": tpot_p99,
+            "ttft_samples": len(ttft), "tpot_samples": len(tpot),
+            "acceptance": win_rate, "acceptance_drift": drift,
+            "error_budget_remaining": budgets,
+            "violating": sorted(self._violating),
+            "thresholds": dataclasses.asdict(self.thresholds),
+        }
+
+    def reset(self) -> None:
+        for q in (self._tok, self._ttft, self._tpot, self._acc):
+            q.clear()
+        self._violating.clear()
+
+
+def slo_report(slo: "SloTracker") -> str:
+    """Fixed-width ``--slo-report`` rendering of one SLO snapshot."""
+    s = slo.snapshot()
+    rows = [
+        ("window", f"{s['window_s']:.0f}s"),
+        ("throughput (tok/s)", f"{s['tok_s']:.1f}"),
+        ("TTFT p50/p99 (ms)",
+         f"{s['ttft_p50_s'] * 1e3:.2f} / {s['ttft_p99_s'] * 1e3:.2f}"
+         f"  (n={s['ttft_samples']})"),
+        ("TPOT p50/p99 (ms)",
+         f"{s['tpot_p50_s'] * 1e3:.2f} / {s['tpot_p99_s'] * 1e3:.2f}"
+         f"  (n={s['tpot_samples']})"),
+    ]
+    if s["acceptance"] or s["acceptance_drift"]:
+        rows.append(("acceptance (window, drift)",
+                     f"{s['acceptance']:.3f} "
+                     f"({s['acceptance_drift']:+.3f} vs cumulative)"))
+    rows.append(("error budget ttft/tpot/tok_s/acc",
+                 "/".join(f"{s['error_budget_remaining'][k]:.2f}"
+                          for k in ("ttft", "tpot", "tok_s",
+                                    "acceptance"))))
+    rows.append(("violations",
+                 ", ".join(s["violating"]) if s["violating"] else "none"))
+    width = max(len(k) for k, _ in rows)
+    lines = ["── slo health " + "─" * max(0, width + 10 - 14)]
+    lines += [f"{k.ljust(width)}  {v}" for k, v in rows]
+    lines.append("─" * (width + 10))
+    return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------
@@ -494,6 +748,13 @@ class Recorder:
             "spec_emitted_total", "Tokens emitted by speculative rounds")
         # compiled-program cache
         self._jit_miss: Dict[str, Counter] = {}
+        self._jit_disabled: set = set()
+        # deep-observability attachments (PR 10): a QualityProbe /
+        # KernelProfiler set by the launcher; None keeps the recorder
+        # jax-free and the hooks no-ops.
+        self.quality = None
+        self.profiler = None
+        self.slo = SloTracker(self.registry, clock=clock)
 
     # -- plumbing ----------------------------------------------------------
     def __bool__(self) -> bool:
@@ -515,8 +776,11 @@ class Recorder:
         if self.tracer is not None:
             self.tracer.reset()
         self._req.clear()
+        self.slo.reset()
         for site in self._jit_sites:
-            site[2] = self._cache_size(site[1])
+            size = self._cache_size(site[1])
+            if size is not None:
+                site[2] = size
 
     def _state(self, req) -> _ReqState:
         st = self._req.get(req.uid)
@@ -569,10 +833,21 @@ class Recorder:
         ts = self.now()
         st = self._req.pop(req.uid, None)
         if st is not None and st.first_tok_ts is not None and st.tokens > 1:
-            self._h_tpot.observe(
-                (st.last_tok_ts - st.first_tok_ts) / (st.tokens - 1))
+            tpot = (st.last_tok_ts - st.first_tok_ts) / (st.tokens - 1)
+            self._h_tpot.observe(tpot)
+            self.slo.note_tpot(ts, tpot)
         if self.tracer is not None:
             self.tracer.instant(req.uid + 1, "finish", ts)
+        if self.quality is not None:
+            self.quality.on_finish(req)
+
+    def on_request_id(self, req, request_id: str) -> None:
+        """A client-supplied ``X-Request-Id`` attached to ``req``: mark
+        the request's tracer lane so external log correlation can find
+        it in the Perfetto view."""
+        if self.tracer is not None:
+            self.tracer.instant(req.uid + 1, "x-request-id", self.now(),
+                                id=str(request_id))
 
     def on_cancel(self, req) -> None:
         self._c_cancelled.inc()
@@ -619,10 +894,12 @@ class Recorder:
         self._c_generated_tok.inc(n)
         if source == "decode":
             self._c_decode_tok.inc(n)
+        self.slo.note_tokens(ts, n)
         st = self._state(req)
         if st.first_tok_ts is None:
             st.first_tok_ts = ts
             self._h_ttft.observe(ts - st.submit_ts)
+            self.slo.note_ttft(ts, ts - st.submit_ts)
             gap_n = n - 1
         else:
             gap_n = n
@@ -700,20 +977,40 @@ class Recorder:
         self._c_spec_corrections.inc(corrections)
         self._c_spec_bonuses.inc(bonuses)
         self._c_spec_emitted.inc(emitted)
+        self.slo.note_acceptance(self.now(), proposed, accepted)
 
     # -- compiled-program cache misses --------------------------------------
     @staticmethod
-    def _cache_size(fn) -> int:
+    def _cache_size(fn) -> Optional[int]:
+        """Compile-cache entry count of a jitted callable, or ``None``
+        when this jax version exposes no usable probe.
+
+        ``PjitFunction._cache_size`` is a private jax surface — a jax
+        upgrade may rename or drop it.  ``None`` (rather than a silent
+        0) lets the caller mark the site *disabled* so miss counters
+        degrade to absent instead of lying or crashing the recorder."""
         get = getattr(fn, "_cache_size", None)
+        if get is None or not callable(get):
+            return None
         try:
-            return int(get()) if get is not None else 0
+            return int(get())
         except Exception:
-            return 0
+            return None
 
     def register_jit_site(self, site: str, fn) -> None:
         """Track a jitted callable's compile cache around the engine's
         dispatch sites; growth between polls is a compile-cache miss
-        (re-tracing — e.g. an unexpected new shape on the hot path)."""
+        (re-tracing — e.g. an unexpected new shape on the hot path).
+        Sites whose callable has no cache probe register as disabled:
+        they are skipped by :meth:`poll_jit` (one debug log, no crash,
+        no counter samples)."""
+        baseline = self._cache_size(fn)
+        if baseline is None:
+            if site not in self._jit_disabled:
+                self._jit_disabled.add(site)
+                log("obs", f"jit cache probe unavailable for site "
+                    f"{site!r}; miss counter disabled", level="debug")
+            return
         self._jit_miss.setdefault(site, self.registry.counter(
             "jit_cache_misses_total",
             "Compile-cache misses at instrumented dispatch sites",
@@ -721,11 +1018,13 @@ class Recorder:
         for entry in self._jit_sites:
             if entry[0] == site and entry[1] is fn:
                 return  # engines sharing a recorder register common sites
-        self._jit_sites.append([site, fn, self._cache_size(fn)])
+        self._jit_sites.append([site, fn, baseline])
 
     def poll_jit(self) -> None:
         for entry in self._jit_sites:
             size = self._cache_size(entry[1])
+            if size is None:
+                continue  # probe vanished mid-flight: degrade, don't crash
             if size > entry[2]:
                 self._jit_miss[entry[0]].inc(size - entry[2])
                 entry[2] = size
@@ -781,12 +1080,36 @@ NULL_RECORDER = NullRecorder()
 # ---------------------------------------------------------------------------
 
 
+# metric families the curated summary rows already fold in; everything
+# else renders in the sorted detail section below them
+_SUMMARY_CURATED = frozenset({
+    "serve_requests_submitted_total", "serve_requests_finished_total",
+    "serve_requests_cancelled_total", "serve_prefill_tokens_total",
+    "serve_decode_tokens_total", "serve_generated_tokens_total",
+    "serve_ttft_seconds", "serve_tpot_seconds", "serve_itl_seconds",
+    "serve_batch_occupancy", "serve_pool_pages_used",
+    "serve_pool_pages_free", "serve_pool_fragmentation",
+    "serve_swap_bytes_total", "serve_evicted_total",
+    "serve_prefix_lookups_total", "serve_cached_prefix_tokens",
+    "serve_prefix_reused_tokens_total", "serve_cow_clones_total",
+    "serve_cow_bytes_total", "spec_proposed_total", "spec_accepted_total",
+    "spec_request_rounds_total", "spec_rounds_total",
+    "jit_cache_misses_total",
+})
+
+
 def summary_table(registry: MetricsRegistry) -> str:
     """Fixed-width summary of the serving snapshot: request counts,
     token counters, TTFT/TPOT/ITL histogram stats, batch occupancy,
     page-pool gauges, swap traffic, speculative acceptance and jit
     cache misses — all read from the registry (one source of truth
-    with the Prometheus exposition and the benchmark cells)."""
+    with the Prometheus exposition and the benchmark cells).
+
+    Deterministically ordered: the curated headline rows are a fixed
+    sequence, and every remaining non-zero metric renders below them
+    sorted by metric name then labels, so CI stream diffs of two runs
+    over the same workload are stable regardless of metric-registration
+    order."""
     v = registry.value
     rows: List[Tuple[str, str]] = []
 
@@ -857,6 +1180,19 @@ def summary_table(registry: MetricsRegistry) -> str:
                      f"{registry.value('spec_rounds_total', path='sampled'):.0f}"))
     misses = registry.sum_values("jit_cache_misses_total")
     rows.append(("jit compile-cache misses", f"{misses:.0f}"))
+    # detail section: every family the curated rows don't fold in, in
+    # sorted (name, labels) order, zero-valued entries elided
+    detail: List[Tuple[str, str]] = []
+    for (name, labels), m in sorted(registry._metrics.items()):
+        if name in _SUMMARY_CURATED:
+            continue
+        key = name + MetricsRegistry._fmt_labels(labels)
+        if isinstance(m, Histogram):
+            if m.count:
+                detail.append((key, f"mean {m.mean:.4g}  (n={m.count})"))
+        elif m.value:
+            detail.append((key, MetricsRegistry._fmt_num(m.value)))
+    rows += detail
     width = max(len(k) for k, _ in rows)
     lines = ["── serving metrics " + "─" * max(0, width + 10 - 19)]
     lines += [f"{k.ljust(width)}  {val}" for k, val in rows]

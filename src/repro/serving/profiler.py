@@ -1,0 +1,189 @@
+"""Kernel-level profiler for the serving engines (PR 10).
+
+Answers "where does device time actually go inside a step" without
+breaking the PR-7 zero-overhead guarantee:
+
+  * **Sampled timed steps** — the engine calls :meth:`KernelProfiler.tick`
+    once per step; every ``every``-th step becomes a *profiled* step.  On
+    a profiled step the engine routes its jitted calls through
+    :meth:`timed`, which brackets the dispatch with
+    ``jax.block_until_ready`` so the wall window covers actual device
+    execution, records a per-site latency histogram
+    (``kernel_latency_seconds{site=...}``), and emits a span on the
+    dedicated ``kernels`` tracer lane (``Tracer.KERNEL_TID``) merged into
+    the existing Chrome/Perfetto trace.  On every *other* step the engine
+    takes its normal path — no wrapper, no sync, no host work beyond one
+    modulo; with the profiler off (the default) the hook sites reduce to
+    the usual ``if obs:`` boolean.  ``block_until_ready`` inside a
+    profiled step is the one sanctioned exception to the recorder's
+    no-sync rule: it is what makes the measurement a device latency
+    rather than a dispatch latency, and it cannot change values — only
+    when the host waits.
+
+  * **Compiled-program cost analysis** — once per (site, abstract
+    signature), :meth:`timed` lowers the already-jitted callable and
+    reads XLA's ``cost_analysis`` (via the version-tolerant
+    ``analysis/hlo_stats.py`` normaliser) into
+    ``kernel_flops{site=...}`` / ``kernel_bytes{site=...}`` gauges, so a
+    latency regression is attributable to "the program got bigger" vs
+    "the same program got slower".
+
+  * **Dispatch-site counters** — :func:`attach_dispatch_hook` installs a
+    hook in ``kernels.dispatch`` that counts LUT-MU backend selections on
+    static call metadata (``lutmu_dispatch_total{backend=...,
+    input_kind=...}``).  The hook fires at trace time (once per
+    compilation), so it counts *compiled programs per backend*, adds
+    nothing per executed step, and never touches traced values.
+
+Streams are unaffected by construction: timing wraps calls whose results
+the engine was about to consume anyway, and ``tests/test_obs.py`` pins
+profiler-on vs profiler-off bit-exactness on all three engines.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+from repro.serving.obs import (MetricsRegistry, Tracer, log)
+
+__all__ = ["KernelProfiler", "attach_dispatch_hook"]
+
+# µs-scale kernel latencies need finer buckets than request latencies
+KERNEL_BUCKETS = (1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3,
+                  5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25, 0.5, 1.0)
+
+
+class KernelProfiler:
+    """Sampling kernel profiler; attach to a live recorder as
+    ``rec.profiler`` (engines pick it up via ``obs.profiler``)."""
+
+    def __init__(self, registry: MetricsRegistry, *,
+                 tracer: Optional[Tracer] = None, every: int = 16,
+                 clock=time.perf_counter):
+        if every < 1:
+            raise ValueError(f"profile every must be >= 1, got {every}")
+        self.registry = registry
+        self.tracer = tracer
+        self.every = int(every)
+        self.active = False
+        self._clock = clock
+        self._step = 0
+        self._hists: Dict[str, object] = {}
+        self._cost_done: set = set()
+        self._c_steps = registry.counter(
+            "kernel_profiled_steps_total", "Engine steps profiled")
+
+    # -- sampling ------------------------------------------------------------
+    def tick(self) -> bool:
+        """Advance the step counter; returns (and latches) whether the
+        step that is about to run is a profiled one."""
+        self._step += 1
+        self.active = self._step % self.every == 0
+        if self.active:
+            self._c_steps.inc()
+        return self.active
+
+    # -- the timed wrapper ---------------------------------------------------
+    def _hist(self, site: str):
+        h = self._hists.get(site)
+        if h is None:
+            h = self.registry.histogram(
+                "kernel_latency_seconds",
+                "Device latency of profiled jitted dispatches by site",
+                buckets=KERNEL_BUCKETS, site=site)
+            self._hists[site] = h
+        return h
+
+    def timed(self, site: str, fn, *args, **kwargs):
+        """Run ``fn(*args, **kwargs)``, block until its outputs are
+        ready, and record the wall window as ``site``'s device latency.
+        Call ONLY inside a profiled step (``self.active``)."""
+        import jax
+
+        self._maybe_cost(site, fn, args, kwargs)
+        t0 = self._clock()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        t1 = self._clock()
+        self._hist(site).observe(t1 - t0)
+        if self.tracer is not None:
+            self.tracer.span(Tracer.KERNEL_TID, site, t0, t1)
+        return out
+
+    # -- cost analysis -------------------------------------------------------
+    @staticmethod
+    def _signature(args, kwargs) -> Tuple:
+        import jax
+
+        def leaf_sig(x):
+            if hasattr(x, "shape") and hasattr(x, "dtype"):
+                return (tuple(x.shape), str(x.dtype))
+            return repr(x)
+
+        leaves = jax.tree_util.tree_leaves((args, kwargs))
+        return tuple(leaf_sig(x) for x in leaves)
+
+    def _maybe_cost(self, site: str, fn, args, kwargs) -> None:
+        """FLOPs / bytes-accessed gauges for the compiled program behind
+        this (site, signature), computed once.  Lowering re-traces but
+        does not execute, so donated buffers are untouched; failures
+        (non-jitted callables, exotic signatures) disable the pair for
+        that key rather than perturbing serving."""
+        key = (site,) + self._signature(args, kwargs)
+        if key in self._cost_done:
+            return
+        self._cost_done.add(key)
+        if not hasattr(fn, "lower"):
+            return
+        try:
+            from repro.analysis.hlo_stats import cost_analysis_dict
+
+            cost = cost_analysis_dict(fn.lower(*args, **kwargs).compile())
+            flops = float(cost.get("flops", 0.0) or 0.0)
+            nbytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+            self.registry.gauge(
+                "kernel_flops", "XLA cost-analysis FLOPs of the compiled "
+                "program at a profiled site", site=site).set(flops)
+            self.registry.gauge(
+                "kernel_bytes", "XLA cost-analysis bytes accessed of the "
+                "compiled program at a profiled site", site=site).set(nbytes)
+        except Exception as e:  # noqa: BLE001 — observation must not kill serving
+            log("profiler", f"cost_analysis unavailable for {site}: {e!r}",
+                level="debug")
+
+    # -- snapshot ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Per-site latency summary (the ``/debug`` surfaces read this)."""
+        sites = {}
+        for site, h in sorted(self._hists.items()):
+            if h.count:
+                sites[site] = {
+                    "count": h.count,
+                    "mean_s": h.mean,
+                    "p50_s": h.quantile(0.5),
+                    "p99_s": h.quantile(0.99),
+                    "flops": self.registry.value("kernel_flops", site=site),
+                    "bytes": self.registry.value("kernel_bytes", site=site),
+                }
+        return {"every": self.every, "profiled_steps": self._step // self.every,
+                "sites": sites}
+
+
+def attach_dispatch_hook(registry: MetricsRegistry):
+    """Install the LUT-MU dispatch counter hook; returns a detach
+    callable.  Counts backend selections on static metadata at trace
+    time — one event per compiled program, zero per-step cost."""
+    from repro.kernels import dispatch as D
+
+    def hook(*, backend: str, input_kind: str, **_meta) -> None:
+        registry.counter(
+            "lutmu_dispatch_total",
+            "LUT-MU programs compiled per selected backend",
+            backend=backend, input_kind=input_kind).inc()
+
+    D.set_profile_hook(hook)
+
+    def detach() -> None:
+        D.set_profile_hook(None)
+
+    return detach

@@ -68,6 +68,9 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     priority: int = 0
+    # caller-supplied correlation id (HTTP ``X-Request-Id``): opaque to
+    # the scheduler, echoed in trace instants and NDJSON final records
+    client_request_id: Optional[str] = None
     # per-request stochastic sampling (default: greedy argmax).  Host-side
     # config only — the RNG key is never materialised here: every draw is
     # re-derived from (sampling.seed, len(generated), role) inside the

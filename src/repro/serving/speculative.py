@@ -79,7 +79,8 @@ import numpy as np
 from repro.models import model as MD
 from repro.models.config import ModelConfig
 from repro.serving import sampling as S
-from repro.serving.engine import ServeEngine, _splice_artifact
+from repro.serving.engine import (ServeEngine, _profiled_call,
+                                  _splice_artifact)
 from repro.serving.kv_cache import HostKV, PagedKVCache
 from repro.serving.obs import Recorder
 from repro.serving.scheduler import Request
@@ -302,6 +303,10 @@ class SpeculativeEngine(ServeEngine):
         """One engine iteration: swaps (both caches), copy-on-write clones
         (both caches), at most one prefill chunk (both models), one
         speculative draft+verify round."""
+        if self.obs:
+            prof = getattr(self.obs, "profiler", None)
+            if prof is not None:
+                prof.tick()
         plan = self.sched.schedule()
         for req, old_pages in plan.swap_out:
             req.host_kv = self.kv.gather_host(old_pages)
@@ -342,7 +347,8 @@ class SpeculativeEngine(ServeEngine):
         first token comes from the target logits — the same computation,
         on the same arguments, as the plain engine's prefill, so it is
         bit-identical."""
-        logits, self.kv.buffers, self.kv_draft.buffers = self._prefill_pair(
+        logits, self.kv.buffers, self.kv_draft.buffers = _profiled_call(
+            self.obs, "spec.prefill_pair", self._prefill_pair,
             self.params, self.draft_params, jnp.asarray(toks),
             jnp.asarray(chunk.start, jnp.int32),
             jnp.asarray(chunk.n_valid, jnp.int32),
@@ -380,13 +386,15 @@ class SpeculativeEngine(ServeEngine):
             # path skips the sampling machinery — same accepted/emit
             # contract, bit-identical tokens
             (accepted, emit, self.kv.buffers,
-             self.kv_draft.buffers) = self._round_greedy(
+             self.kv_draft.buffers) = _profiled_call(
+                self.obs, "spec.round_greedy", self._round_greedy,
                 self.params, self.draft_params, jnp.asarray(token),
                 jnp.asarray(pos), jnp.asarray(n_valid), jnp.asarray(table),
                 self.kv.buffers, self.kv_draft.buffers)
         else:
             (accepted, emit, self.kv.buffers,
-             self.kv_draft.buffers) = self._round(
+             self.kv_draft.buffers) = _profiled_call(
+                self.obs, "spec.round", self._round,
                 self.params, self.draft_params, jnp.asarray(token),
                 jnp.asarray(pos), jnp.asarray(n_valid), jnp.asarray(table),
                 jnp.asarray(seed), jnp.asarray(t0), jnp.asarray(temp),

@@ -214,6 +214,74 @@ def test_http_per_tenant_rate_limit(setup):
     asyncio.run(main())
 
 
+def test_http_slo_quality_and_request_id(setup):
+    """The PR-10 surfaces: GET /slo serves the SLO snapshot, GET
+    /debug/quality serves the probe snapshot (404 without a probe), and
+    an X-Request-Id header round-trips into the final NDJSON record and
+    the request's tracer lane."""
+    from repro.serving import QualityProbe
+
+    cfg, params = setup
+    rec = Recorder()  # tracing on: the request-id instant must land
+    rec.quality = QualityProbe(rec.registry, rate=1.0, dense_params=params)
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64, recorder=rec)
+    server = AsyncServer(eng, port=0)
+
+    async def main():
+        await server.start()
+        try:
+            r, w, status, hdrs = await _request(
+                server.port, "POST", "/v1/generate",
+                body={"prompt": STEM, "max_new_tokens": 3},
+                headers={"X-Request-Id": "corr-42"})
+            assert status == 200
+            recs = [json.loads(ln) for ln in
+                    (await _read_body(r, hdrs)).decode().splitlines()]
+            assert recs[-1]["done"] is True
+            assert recs[-1]["client_request_id"] == "corr-42"
+            w.close()
+
+            r, w, status, hdrs = await _request(server.port, "GET", "/slo")
+            assert status == 200
+            slo = json.loads(await _read_body(r, hdrs))
+            assert slo["ttft_samples"] == 1 and slo["tok_s"] > 0
+            assert "error_budget_remaining" in slo
+            w.close()
+
+            r, w, status, hdrs = await _request(server.port, "GET",
+                                                "/debug/quality")
+            assert status == 200
+            q = json.loads(await _read_body(r, hdrs))
+            assert q["enabled"] is True
+            # dense tiny model: probe skips (no AMM layers), zero errors
+            assert q["probe_errors"] == 0
+            w.close()
+        finally:
+            await server.stop()
+
+    asyncio.run(main())
+    inst = [e for e in rec.to_chrome()["traceEvents"] if e["ph"] == "i"]
+    assert any(e["name"] == "x-request-id"
+               and e["args"]["id"] == "corr-42" for e in inst)
+
+    # a probe-less engine answers 404 on /debug/quality
+    eng2 = ServeEngine(params, cfg, max_batch=1, max_len=64,
+                       recorder=Recorder(trace=False))
+    server2 = AsyncServer(eng2, port=0)
+
+    async def no_probe():
+        await server2.start()
+        try:
+            _, w, status, _ = await _request(server2.port, "GET",
+                                             "/debug/quality")
+            assert status == 404
+            w.close()
+        finally:
+            await server2.stop()
+
+    asyncio.run(no_probe())
+
+
 def test_http_health_metrics_and_errors(setup):
     cfg, params = setup
     rec = Recorder(trace=False)

@@ -1,27 +1,32 @@
-"""Observability suite (PR 7).
+"""Observability suite (PR 7 core + PR 10 deep observability).
 
 The load-bearing property: recording is **observation only** — engines
 driven with a live :class:`~repro.serving.obs.Recorder` must emit token
 streams bit-identical to the same engines with recording off, through
 the paged, fixed-slot and speculative paths, including under
-page-pressure eviction.  Plus the subsystem's own contracts: the
-Prometheus exposition parses, the Chrome trace is schema-valid with
-sorted non-overlapping spans per request lane, the ``NullRecorder``
-default is a guaranteed no-op, and ``REPRO_LOG`` drives the leveled
-logger.
+page-pressure eviction.  PR 10 extends the same guarantee to the
+sampled deep-observability layers: the approximation-quality probe
+(``serving/quality.py``), the kernel profiler (``serving/profiler.py``)
+and the SLO health tracker must all leave streams bit-exact.  Plus the
+subsystem's own contracts: the Prometheus exposition parses (hostile
+label values included), the Chrome trace is schema-valid with sorted
+non-overlapping spans per request lane, the ``NullRecorder`` default is
+a guaranteed no-op, and ``REPRO_LOG`` drives the leveled logger.
 """
 import dataclasses
 import json
 
 import jax
+import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.models import model as MD
-from repro.serving import (NULL_RECORDER, FixedSlotEngine, MetricsRegistry,
-                           NullRecorder, Recorder, ServeEngine,
-                           SpeculativeEngine, validate_chrome_trace,
-                           validate_prometheus)
+from repro.serving import (NULL_RECORDER, FixedSlotEngine, KernelProfiler,
+                           MetricsRegistry, NullRecorder, QualityProbe,
+                           Recorder, ServeEngine, SloThresholds, SloTracker,
+                           SpeculativeEngine, load_engine, slo_report,
+                           validate_chrome_trace, validate_prometheus)
 from repro.serving.obs import (Counter, Histogram, Tracer, log, log_enabled,
                                summary_table)
 
@@ -348,3 +353,414 @@ def test_logger_levels(monkeypatch, capsys):
     log("serve", "hidden")
     assert capsys.readouterr().out == ""
     assert not log_enabled("info")
+
+
+# ---------------------------------------------------------------------------
+# PR-10 satellites: exposition hardening, quantile edges, jit degrade,
+# deterministic summaries.
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_hostile_label_values():
+    """Label values carrying backslashes, double quotes and newlines must
+    render per the exposition-format escaping rules — a raw newline in a
+    label would split the sample line and corrupt the whole scrape."""
+    r = MetricsRegistry()
+    r.counter("h_total", "hostile", path='a"b\\c\nd').inc()
+    text = r.to_prometheus()
+    assert validate_prometheus(text) == []
+    assert 'h_total{path="a\\"b\\\\c\\nd"} 1' in text
+    # no raw newline survived inside any sample line
+    for line in text.splitlines():
+        if line.startswith("h_total"):
+            assert line.endswith(" 1")
+
+
+def test_histogram_quantile_edge_cases():
+    # empty histogram: every quantile is 0, not an error
+    h = Histogram("h", buckets=(0.1, 1.0))
+    assert h.quantile(0.0) == 0.0 and h.quantile(0.5) == 0.0
+    assert h.mean == 0.0
+
+    # single observation: q=0 pins the bucket's lower edge, q=1 its upper
+    h.observe(0.05)
+    assert h.quantile(0.0) == 0.0
+    assert h.quantile(1.0) == pytest.approx(0.1)
+    # out-of-range q clamps instead of extrapolating
+    assert h.quantile(-3.0) == h.quantile(0.0)
+    assert h.quantile(7.0) == h.quantile(1.0)
+
+    # +Inf-bucket observations clamp to the top finite edge — the
+    # estimator must not fabricate a bound that was never configured
+    top = Histogram("t", buckets=(0.1, 1.0))
+    top.observe(50.0)
+    assert top.counts[-1] == 1
+    assert top.quantile(0.5) == 1.0
+    assert top.quantile(0.99) == 1.0
+    assert top.mean == 50.0  # sum/count still carry the true value
+
+
+def test_jit_site_without_cache_size_degrades():
+    """A dispatch site whose callable exposes no ``_cache_size`` (plain
+    function, or a jax that dropped the private API) must disable its
+    miss counter — register, poll and reset all stay no-ops instead of
+    crashing the recorder."""
+    rec = Recorder(trace=False)
+
+    def plain(x):
+        return x
+
+    rec.register_jit_site("weird.site", plain)
+    rec.poll_jit()   # must not raise
+    rec.reset()      # must not raise
+    rec.poll_jit()
+    assert rec.registry.sum_values("jit_cache_misses_total") == 0
+
+
+def test_summary_table_deterministic_order():
+    """The ``--metrics`` summary's detail section must not depend on
+    metric insertion order: sorted by name, then label set."""
+    def build(reverse):
+        r = MetricsRegistry()
+        items = [("z_custom_total", {"a": "1"}),
+                 ("a_custom_total", {}),
+                 ("m_custom_total", {"b": "2"}),
+                 ("m_custom_total", {"b": "1"})]
+        for name, labels in (reversed(items) if reverse else items):
+            r.counter(name, "", **labels).inc(2)
+        r.histogram("q_hist", "", buckets=(1.0,)).observe(0.5)
+        return summary_table(r)
+
+    assert build(False) == build(True)
+    t = build(False)
+    ia = t.index("a_custom_total")
+    im1 = t.index('m_custom_total{b="1"}')
+    im2 = t.index('m_custom_total{b="2"}')
+    iz = t.index("z_custom_total")
+    assert ia < im1 < im2 < iz
+    assert "q_hist" in t  # histograms render as mean (n=...)
+    # the CI-grepped header line survives
+    assert "── serving metrics" in t
+
+
+# ---------------------------------------------------------------------------
+# SLO health layer.
+# ---------------------------------------------------------------------------
+
+
+def test_slo_tracker_window_budgets_and_crossings():
+    r = MetricsRegistry()
+    th = SloThresholds(ttft_p99_s=0.1, tpot_p99_s=1.0, min_tok_s=1.0,
+                       min_acceptance=0.5, budget_target=0.9)
+    slo = SloTracker(r, clock=lambda: 100.0, window_s=30.0, thresholds=th)
+    slo.note_tokens(85.0, 30)
+    slo.note_tokens(95.0, 30)
+    slo.note_ttft(90.0, 0.05)
+    slo.note_ttft(95.0, 0.2)            # violates the 100ms objective
+    slo.note_tpot(95.0, 0.01)
+    slo.note_acceptance(95.0, proposed=10, accepted=3)  # 0.3 < 0.5
+
+    s = slo.snapshot(now=100.0)
+    assert s["tok_s"] == pytest.approx(60 / 15)  # span = oldest→now
+    assert s["ttft_p99_s"] == 0.2 and s["ttft_samples"] == 2
+    assert s["acceptance"] == pytest.approx(0.3)
+    # 1 of 2 TTFT samples violate; allowed fraction is 0.1 → exhausted
+    assert s["error_budget_remaining"]["ttft"] == 0.0
+    assert s["error_budget_remaining"]["tpot"] == 1.0
+    assert s["error_budget_remaining"]["tok_s"] == 1.0  # 4 tok/s >= 1
+    assert s["error_budget_remaining"]["acceptance"] == 0.0
+    assert s["violating"] == ["acceptance", "ttft"]
+    assert r.value("slo_violations_total", slo="ttft") == 1
+    # the same violation is counted once per CROSSING, not per snapshot
+    slo.snapshot(now=100.0)
+    assert r.value("slo_violations_total", slo="ttft") == 1
+    # gauges published into the shared registry
+    assert r.value("slo_window_tok_s") == pytest.approx(4.0)
+    assert r.value("slo_ttft_p99_seconds") == 0.2
+    assert r.value("slo_error_budget_remaining", slo="ttft") == 0.0
+
+    # recovery: fresh healthy samples clear the violation, and the NEXT
+    # crossing counts again
+    slo.note_ttft(140.0, 0.01)
+    s2 = slo.snapshot(now=141.0)
+    assert s2["ttft_samples"] == 1 and "ttft" not in s2["violating"]
+    slo.note_ttft(142.0, 0.5)
+    slo.snapshot(now=143.0)
+    assert r.value("slo_violations_total", slo="ttft") == 2
+
+    # an empty window spends no budget and reads 0 tok/s
+    s3 = slo.snapshot(now=500.0)
+    assert s3["tok_s"] == 0.0 and s3["ttft_samples"] == 0
+    assert s3["error_budget_remaining"]["ttft"] == 1.0
+
+    slo.reset()
+    assert slo.snapshot(now=500.0)["violating"] == []
+
+
+def test_slo_report_renders():
+    r = MetricsRegistry()
+    slo = SloTracker(r, clock=lambda: 10.0, window_s=30.0)
+    slo.note_tokens(5.0, 20)
+    slo.note_ttft(5.0, 0.05)
+    slo.note_tpot(6.0, 0.01)
+    text = slo_report(slo)
+    assert "── slo health" in text
+    assert "throughput (tok/s)" in text and "violations" in text
+    assert "none" in text
+
+
+def test_recorder_feeds_slo_from_engine_run(setup):
+    """A real engine run must populate the recorder's SLO window — the
+    /slo endpoint and --slo-report read exactly this snapshot."""
+    cfg, params = setup
+    rec = Recorder(trace=False)
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64, recorder=rec)
+    eng.submit([1, 2, 3], max_new_tokens=4)
+    eng.submit([4, 5], max_new_tokens=4)
+    eng.run_until_drained()
+    s = rec.slo.snapshot()
+    assert s["ttft_samples"] == 2 and s["tpot_samples"] == 2
+    assert s["tok_s"] > 0
+    rec.reset()
+    assert rec.slo.snapshot()["ttft_samples"] == 0
+
+
+def test_request_id_trace_instant():
+    """``on_request_id`` must land the client id on the request's tracer
+    lane (the X-Request-Id propagation path)."""
+    rec = Recorder()
+
+    class _Req:
+        uid = 3
+
+    rec.on_request_id(_Req(), "abc-123")
+    obj = rec.to_chrome()
+    inst = [e for e in obj["traceEvents"] if e["ph"] == "i"]
+    assert any(e["name"] == "x-request-id"
+               and e["args"]["id"] == "abc-123" for e in inst)
+
+
+# ---------------------------------------------------------------------------
+# Kernel profiler: bit-exactness + artifacts.
+# ---------------------------------------------------------------------------
+
+
+def _rec_with_profiler(every=2, trace=True):
+    rec = Recorder(trace=trace)
+    rec.profiler = KernelProfiler(rec.registry, tracer=rec.tracer,
+                                  every=every)
+    return rec
+
+
+def test_profiler_rejects_bad_every():
+    with pytest.raises(ValueError, match="every"):
+        KernelProfiler(MetricsRegistry(), every=0)
+
+
+def test_paged_bitexact_with_profiler(setup):
+    """Profiler on (sampling every 2nd step, with tracer) vs off on the
+    eviction workload — streams bit-identical, and the profiled run
+    leaves per-site latency histograms, cost gauges and a ``kernels``
+    trace lane."""
+    cfg, params = setup
+    off, _ = _streams(lambda: ServeEngine(params, cfg, max_len=64,
+                                          **EVICT_KWARGS))
+    rec = _rec_with_profiler()
+    on, _ = _streams(lambda: ServeEngine(params, cfg, max_len=64,
+                                         recorder=rec, **EVICT_KWARGS))
+    assert on == off
+    assert rec.registry.value("kernel_profiled_steps_total") > 0
+    hists = rec.registry.find("kernel_latency_seconds")
+    assert hists and sum(h.count for h in hists) > 0
+    sites = {dict(h.labels)["site"] for h in hists}
+    assert "serve.decode" in sites
+    # cost analysis attributed FLOPs/bytes to the compiled decode program
+    assert rec.registry.value("kernel_flops", site="serve.decode") > 0
+    assert rec.registry.value("kernel_bytes", site="serve.decode") > 0
+    obj = rec.to_chrome()
+    assert validate_chrome_trace(obj) == []
+    lanes = {e["args"]["name"] for e in obj["traceEvents"]
+             if e["ph"] == "M"}
+    assert "kernels" in lanes
+    snap = rec.profiler.snapshot()
+    assert snap["sites"]["serve.decode"]["count"] > 0
+    assert snap["sites"]["serve.decode"]["p99_s"] >= 0
+
+
+def test_fixed_and_speculative_bitexact_with_profiler(setup):
+    cfg, params = setup
+    off_f, _ = _streams(lambda: FixedSlotEngine(params, cfg, slots=2,
+                                                max_len=64))
+    rec_f = _rec_with_profiler(trace=False)
+    on_f, _ = _streams(lambda: FixedSlotEngine(params, cfg, slots=2,
+                                               max_len=64, recorder=rec_f))
+    assert on_f == off_f
+    assert {dict(h.labels)["site"]
+            for h in rec_f.registry.find("kernel_latency_seconds")} \
+        == {"fixed.decode"}
+
+    def mk(recorder=None):
+        kw = dict(spec_k=3, max_batch=3, max_len=64, page_size=16,
+                  prefill_chunk=4)
+        if recorder is not None:
+            kw["recorder"] = recorder
+        return SpeculativeEngine(params, cfg, params, **kw)
+
+    off_s, _ = _streams(mk)
+    rec_s = _rec_with_profiler(trace=False)
+    on_s, _ = _streams(lambda: mk(rec_s))
+    assert on_s == off_s
+    sites = {dict(h.labels)["site"]
+             for h in rec_s.registry.find("kernel_latency_seconds")}
+    assert "spec.round_greedy" in sites
+
+
+def test_dispatch_hook_counts_compiled_programs():
+    """``attach_dispatch_hook`` counts LUT-MU backend selections on
+    static call metadata; detach stops the counting."""
+    from repro.kernels import dispatch as D
+    from repro.serving.profiler import attach_dispatch_hook
+
+    rng = np.random.default_rng(0)
+    c, depth, d_sub, n = 2, 2, 4, 3
+    p = D.params_from_arrays(
+        rng.integers(0, d_sub, (c, depth)).astype(np.int32),
+        rng.standard_normal((c, 2 ** depth - 1)).astype(np.float32),
+        rng.standard_normal((c, 2 ** depth, n)).astype(np.float32),
+        np.ones(n, np.float32), np.zeros(n, np.float32))
+    x = rng.standard_normal((5, c * d_sub)).astype(np.float32)
+
+    r = MetricsRegistry()
+    detach = attach_dispatch_hook(r)
+    try:
+        D.lutmu_matmul(jax.numpy.asarray(x), p, backend="ref",
+                       input_kind="full")
+        assert r.value("lutmu_dispatch_total", backend="ref",
+                       input_kind="full") == 1
+    finally:
+        detach()
+    D.lutmu_matmul(jax.numpy.asarray(x), p, backend="ref",
+                   input_kind="full")
+    assert r.value("lutmu_dispatch_total", backend="ref",
+                   input_kind="full") == 1
+
+
+# ---------------------------------------------------------------------------
+# Quality probe: bit-exactness + recorded quality metrics.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def amm_artifact(setup, tmp_path_factory):
+    """A compiled amm_lm artifact over the tiny config (real fitted
+    trees/LUTs, so probe replays exercise the true serving path)."""
+    cfg, params = setup
+    from repro.compiler import compile_lm_amm
+
+    rng = np.random.default_rng(0)
+    calib = rng.integers(0, cfg.vocab_size, (2, 8))
+    out = str(tmp_path_factory.mktemp("pr10_amm") / "lm")
+    compile_lm_amm(params, cfg, calib, out=out)
+    return out
+
+
+def test_quality_probe_bitexact_and_metrics(setup, amm_artifact):
+    """Probe at rate=1.0 (every finished request replayed) vs no probe on
+    the AMM paged engine — streams bit-identical, and the probed run
+    records rel-error histograms per projection, codebook utilisation
+    and saturation counters with zero probe errors."""
+    cfg, params = setup
+
+    def mk(rec=None):
+        return load_engine(amm_artifact, params, cfg, max_batch=2,
+                           max_len=64, recorder=rec)
+
+    off, _ = _streams(mk)
+    rec = Recorder(trace=False)
+    rec.quality = QualityProbe(rec.registry, rate=1.0, dense_params=params)
+    on, _ = _streams(lambda: mk(rec))
+    assert on == off
+    v = rec.registry.value
+    assert v("quality_probes_total") == len(PROMPTS)
+    assert v("quality_probe_errors_total") == 0
+    assert v("quality_probe_tokens_total") > 0
+    rels = rec.registry.find("quality_rel_error")
+    assert rels and all(h.count > 0 for h in rels)
+    assert {dict(h.labels)["proj"] for h in rels} == {"gate", "up", "down"}
+    # int8 tables: lookups counted, utilisation gauges live
+    assert v("quality_lookups_total", layer="0", proj="gate") > 0
+    assert rec.registry.find("quality_bucket_utilisation")
+    snap = rec.quality.snapshot()
+    assert snap["dense_reference"] is True and snap["supported"] is True
+    assert snap["probes"] == len(PROMPTS)
+    assert snap["layers"]["0"]["rel_error"]["gate"]["n"] > 0
+    assert snap["layers"]["0"]["buckets"]["up"]["total"] > 0
+
+
+def test_quality_probe_without_dense_reference(setup, amm_artifact):
+    """No dense weights → the rel-error section degrades away but
+    utilisation/saturation still record, with zero errors."""
+    cfg, params = setup
+    rec = Recorder(trace=False)
+    rec.quality = QualityProbe(rec.registry, rate=1.0)
+    eng = load_engine(amm_artifact, params, cfg, max_batch=2, max_len=64,
+                      recorder=rec)
+    eng.submit([1, 2, 3, 4], max_new_tokens=4)
+    eng.run_until_drained()
+    v = rec.registry.value
+    assert v("quality_probes_total") == 1
+    assert v("quality_probe_errors_total") == 0
+    assert rec.registry.find("quality_rel_error") == []
+    assert rec.registry.find("quality_bucket_utilisation")
+    assert rec.quality.snapshot()["dense_reference"] is False
+
+
+def test_quality_probe_sampling_rate(setup, amm_artifact):
+    """rate=0.5 probes a deterministic half of finished requests, and a
+    dense engine (no AMM layers) skips with a reason instead of raising."""
+    cfg, params = setup
+    rec = Recorder(trace=False)
+    rec.quality = QualityProbe(rec.registry, rate=0.5)
+    eng = load_engine(amm_artifact, params, cfg, max_batch=2, max_len=64,
+                      recorder=rec)
+    for p in PROMPTS[:4]:
+        eng.submit(p, max_new_tokens=4)
+    eng.run_until_drained()
+    assert rec.registry.value("quality_probes_total") == 2
+
+    # dense engine sharing a fresh probe: every probe opportunity skips
+    rec2 = Recorder(trace=False)
+    rec2.quality = QualityProbe(rec2.registry, rate=1.0)
+    dense = ServeEngine(params, cfg, max_batch=2, max_len=64, recorder=rec2)
+    dense.submit([1, 2, 3], max_new_tokens=4)
+    dense.run_until_drained()
+    assert rec2.registry.value("quality_probes_total") == 0
+    assert rec2.registry.value("quality_probe_skipped_total",
+                               reason="no_amm") == 1
+
+    with pytest.raises(ValueError, match="rate"):
+        QualityProbe(MetricsRegistry(), rate=0.0)
+
+
+def test_quality_probe_bitexact_speculative(setup):
+    """Probe riding the speculative engine's recorder: greedy streams
+    stay bit-identical to the unprobed engine (the probe binds the
+    TARGET half — first engine bind wins)."""
+    cfg, params = setup
+
+    def mk(recorder=None):
+        kw = dict(spec_k=3, max_batch=3, max_len=64, page_size=16,
+                  prefill_chunk=4)
+        if recorder is not None:
+            kw["recorder"] = recorder
+        return SpeculativeEngine(params, cfg, params, **kw)
+
+    off, _ = _streams(mk)
+    rec = Recorder(trace=False)
+    rec.quality = QualityProbe(rec.registry, rate=1.0, dense_params=params)
+    on, _ = _streams(lambda: mk(rec))
+    assert on == off
+    # dense tiny model has no AMM layers: probes all skip, none error
+    assert rec.registry.value("quality_probe_errors_total") == 0
+    assert rec.registry.value("quality_probe_skipped_total",
+                              reason="no_amm") == len(PROMPTS)
